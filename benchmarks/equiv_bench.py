@@ -1,0 +1,32 @@
+"""§2.2.2 equivalence spot-bench: the float-MXU path and the packed-xnor
+path agree bit-for-bit, and the Pallas kernels (interpret mode) match too.
+Reports timing for context (interpret mode is slow on CPU by design — the
+Pallas numbers are correctness evidence, not performance)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitpack
+from repro.kernels import ops, ref
+
+
+def rows():
+    rng = np.random.default_rng(0)
+    m, k, n = 256, 4096, 256
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    oracle = np.asarray(ref.sign_gemm_ref(a, w)).astype(np.int32)
+    ap, wp = bitpack.pack_sign(a), bitpack.pack_sign(w.T)
+
+    for backend in ("xla", "vpu", "mxu"):
+        t0 = time.perf_counter()
+        got = np.asarray(ops.xnor_gemm(ap, wp, k_true=k, backend=backend))
+        dt = (time.perf_counter() - t0) * 1e6
+        exact = bool((got == oracle).all())
+        yield {"backend": backend, "M": m, "K": k, "N": n,
+               "us_per_call_cold": round(dt, 1), "exact_match": exact}

@@ -1,0 +1,118 @@
+"""Paper Figures 1-3: GEMM method comparison.
+
+The paper benchmarks (on x86): naive C GEMM, Cblas/Atlas, xnor_32/64(+omp)
+within a conv layer (M=filters, N=spatial*batch, K=k*k*Cin).  The TPU-
+framework equivalents measured here on the host CPU via XLA:
+
+  * ``dense_f32``    — XLA float GEMM (the Cblas stand-in)
+  * ``xnor_packed``  — packed xnor GEMM, jnp/XLA reference path (popcount)
+  * ``xnor_packed+binarize`` — same, including on-the-fly input packing
+    (Fig. 1's "binarize input and xnor_64_omp" bar)
+  * ``naive_loop``   — tiny python-loop GEMM on a SUBSAMPLE, extrapolated
+    (the paper's naive baseline; only for the speedup denominator)
+
+Axes swept exactly like the paper: Fig1 varies input channels, Fig2 varies
+filter count, Fig3 varies kernel size.  Wall-times are host-CPU; the TPU
+projection lives in the roofline analysis, not here.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitpack
+from repro.kernels import ref
+
+
+def _time(fn, *args, warmup=2, iters=5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+import functools
+
+
+@jax.jit
+def _dense(a, b):
+    return a @ b
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _xnor_packed(ap, bp, k):
+    return ref.xnor_gemm_ref(ap, bp, k)
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _xnor_with_binarize(a, bp, k):
+    ap = bitpack.pack_sign(a)
+    return ref.xnor_gemm_ref(ap, bp, k)
+
+
+def _naive_us(m, n, k) -> float:
+    """Extrapolated python/NumPy-loop GEMM time (paper's naive baseline)."""
+    mm, nn = min(m, 16), min(n, 64)
+    a = np.random.randn(mm, k).astype(np.float32)
+    b = np.random.randn(k, nn).astype(np.float32)
+    t0 = time.perf_counter()
+    out = np.zeros((mm, nn), np.float32)
+    for i in range(mm):
+        for j in range(nn):
+            out[i, j] = float(np.dot(a[i], b[:, j]))
+    dt = (time.perf_counter() - t0) * 1e6
+    return dt * (m / mm) * (n / nn)
+
+
+def conv_gemm_row(filters=64, kernel=5, channels=256, batch=200, spatial=8):
+    """One (M,N,K) point with the paper's conv-layer mapping."""
+    m = filters
+    k = kernel * kernel * channels
+    n = batch * spatial * spatial
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    ap = bitpack.pack_sign(a)
+    bp = bitpack.pack_sign(b.T)
+
+    t_dense = _time(_dense, a, b)
+    t_xnor = _time(_xnor_packed, ap, bp, k)
+    t_xnor_bin = _time(_xnor_with_binarize, a, bp, k)
+    t_naive = _naive_us(m, n, k)
+    return {
+        "M": m, "N": n, "K": k,
+        "dense_f32_us": t_dense,
+        "xnor_packed_us": t_xnor,
+        "xnor_with_binarize_us": t_xnor_bin,
+        "naive_us_extrapolated": t_naive,
+        "speedup_vs_dense": t_dense / t_xnor,
+        "speedup_vs_naive": t_naive / t_xnor,
+    }
+
+
+def fig1_rows():
+    """Fig 1: vary input channel size; filters=64, kernel=5, batch=200."""
+    for ch in (64, 128, 256, 512):
+        yield {"sweep": "channels", "value": ch,
+               **conv_gemm_row(channels=ch, spatial=4)}
+
+
+def fig2_rows():
+    """Fig 2: vary filter number; channels=256, kernel=5, batch=200."""
+    for f in (16, 32, 64, 128):
+        yield {"sweep": "filters", "value": f,
+               **conv_gemm_row(filters=f, spatial=4)}
+
+
+def fig3_rows():
+    """Fig 3: vary kernel size; channels=256, batch=200, filters=64."""
+    for ks in (1, 3, 5, 7):
+        yield {"sweep": "kernel", "value": ks,
+               **conv_gemm_row(kernel=ks, spatial=4)}

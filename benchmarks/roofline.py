@@ -1,0 +1,69 @@
+"""Roofline aggregation: read experiments/dryrun/*.json and print the
+§Roofline table (per arch x shape x mesh x quant: three terms, bottleneck,
+useful-flop fraction, fits-HBM verdict)."""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+
+def load(outdir: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r) -> str:
+    if r.get("status") != "ok":
+        return (f"{r['arch']:<18} {r['shape']:<12} {'-':<8} {'-':<14} "
+                f"SKIPPED: {r.get('reason', '')[:40]}")
+    t = r["roofline"]
+    dom = max(t, key=t.get)
+    lb = max(t.values())
+    frac = {k: v / lb for k, v in t.items()}
+    fits = "Y" if r["peak_bytes"] <= HBM_PER_CHIP else "OVER"
+    return (
+        f"{r['arch']:<18} {r['shape']:<12} {r['mesh']:<8} {r['quant']:<14} "
+        f"C={t['compute_s']:.2e} M={t['memory_s']:.2e} "
+        f"X={t['collective_s']:.2e} dom={dom[:-2]:<11} "
+        f"step>={lb:.2e}s eff={t['compute_s'] / lb * 100:5.1f}% "
+        f"useful={100 * (r.get('useful_flop_frac') or 0):5.1f}% "
+        f"peak={r['peak_bytes'] / 2**30:6.2f}G fits={fits}"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.csv:
+        cols = ["arch", "shape", "mesh", "quant", "status"]
+        print(",".join(cols + ["compute_s", "memory_s", "collective_s",
+                               "bottleneck", "peak_gb", "useful_flop_frac"]))
+        for r in recs:
+            base = [str(r.get(c, "")) for c in cols]
+            if r.get("status") == "ok":
+                t = r["roofline"]
+                base += [f"{t['compute_s']:.3e}", f"{t['memory_s']:.3e}",
+                         f"{t['collective_s']:.3e}", r["bottleneck"],
+                         f"{r['peak_bytes'] / 2**30:.2f}",
+                         f"{r.get('useful_flop_frac') or 0:.3f}"]
+            print(",".join(base))
+        return
+    print(f"{'arch':<18} {'shape':<12} {'mesh':<8} {'quant':<14} terms "
+          f"(C=compute M=memory X=collective, seconds/step lower bound)")
+    for r in recs:
+        print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

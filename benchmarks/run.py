@@ -1,0 +1,75 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints CSV rows ``table,name,us_per_call,derived`` (plus per-table columns)
+and, with --json, dumps everything to benchmarks/results.json.
+
+  fig1/2/3    GEMM method timing sweeps (channels / filters / kernel)
+  table1      model size binary vs fp (LeNet, ResNet-18)
+  table2      partial binarization sizes by ResNet stage
+  accuracy    Table 1/2 accuracy mechanism (synthetic data; direction only)
+  lm_sizes    beyond-paper: packed-weight accounting for the assigned pool
+  equiv       §2.2.2 xnor==float timing + exactness spot check
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _emit(table: str, rows, out):
+    for r in rows:
+        cols = ",".join(f"{k}={v}" for k, v in r.items())
+        print(f"{table},{cols}", flush=True)
+        out.setdefault(table, []).append(r)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1,fig2,fig3,table1,table2,"
+                         "accuracy,lm_sizes,equiv")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    out: dict = {}
+
+    if want("fig1") or want("fig2") or want("fig3"):
+        from benchmarks import gemm_bench
+        if want("fig1"):
+            _emit("fig1_channels", gemm_bench.fig1_rows(), out)
+        if want("fig2"):
+            _emit("fig2_filters", gemm_bench.fig2_rows(), out)
+        if want("fig3"):
+            _emit("fig3_kernel", gemm_bench.fig3_rows(), out)
+
+    if want("table1") or want("table2") or want("lm_sizes"):
+        from benchmarks import size_bench
+        if want("table1"):
+            _emit("table1_sizes", size_bench.table1_rows(), out)
+        if want("table2"):
+            _emit("table2_partial", size_bench.table2_rows(), out)
+        if want("lm_sizes"):
+            _emit("lm_packed_sizes", size_bench.lm_rows(), out)
+
+    if want("accuracy"):
+        from benchmarks import accuracy_bench
+        _emit("accuracy_mechanism", accuracy_bench.accuracy_rows(), out)
+
+    if want("equiv"):
+        from benchmarks import equiv_bench
+        _emit("equivalence", equiv_bench.rows(), out)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

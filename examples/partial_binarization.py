@@ -1,0 +1,92 @@
+"""Paper Table 2: partially binarized ResNet-18 — keep chosen stages full
+precision, binarize the rest.  Reproduces the size column exactly and the
+accuracy ORDERING on synthetic data (fp >= partial >= binary).
+
+Run:  PYTHONPATH=src python examples/partial_binarization.py [--train]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import converter
+from repro.core.policy import QuantPolicy
+from repro.models import cnn, registry
+from repro.nn.common import QCtx
+from repro.optim import adamw
+
+STAGES = {
+    "none": (),
+    "1st": ("stage1",),
+    "1st,2nd": ("stage1", "stage2"),
+    "all": ("stage1", "stage2", "stage3", "stage4"),
+}
+
+
+def sizes():
+    print("== Table 2 size column (ImageNet-head ResNet-18) ==")
+    cfg = dataclasses.replace(registry.get("resnet18-cifar10").config,
+                              n_classes=1000, stem_stride=2, in_hw=224)
+    params = cnn.resnet18_init(jax.random.PRNGKey(0), cfg)
+    for name, fp_stages in STAGES.items():
+        pol = QuantPolicy.binary().with_fp_stages(fp_stages)
+        _, rep = converter.convert(params, pol)
+        print(f"  fp_stages={name:<8} size={rep.bytes_after / 1e6:6.2f}MB")
+    print("  (paper: none=3.6, 1st=4.1, 1st+2nd=6.2, all=47MB)")
+
+
+def train_variant(fp_stages, steps=60, seed=0):
+    cfg = registry.get("resnet18-cifar10").smoke
+    pol = QuantPolicy.binary().with_fp_stages(fp_stages)
+    ctx = QCtx(policy=pol, compute_dtype=jnp.float32)
+    params = cnn.resnet18_init(jax.random.PRNGKey(seed), cfg)
+    opt_cfg = adamw.AdamWConfig(lr=2e-3, warmup_steps=5, total_steps=steps,
+                                weight_decay=0.0)
+    opt = adamw.init(params)
+    rng = np.random.default_rng(seed)
+    templates = rng.standard_normal((10, cfg.in_hw, cfg.in_hw, 3)).astype(
+        np.float32)
+
+    def data(n):
+        y = rng.integers(0, 10, n)
+        x = templates[y] + 0.5 * rng.standard_normal(
+            (n, cfg.in_hw, cfg.in_hw, 3)).astype(np.float32)
+        return jnp.asarray(x), jnp.asarray(y)
+
+    def loss_fn(p, x, y):
+        logits = cnn.resnet18_forward(p, cfg, ctx, x)
+        return -jnp.mean(jnp.sum(
+            jax.nn.log_softmax(logits) * jax.nn.one_hot(y, 10), -1))
+
+    @jax.jit
+    def step(p, o, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p, o, _ = adamw.update(g, o, p, opt_cfg)
+        return p, o, l
+
+    for _ in range(steps):
+        x, y = data(32)
+        params, opt, l = step(params, opt, x, y)
+    xt, yt = data(256)
+    logits = cnn.resnet18_forward(params, cfg, ctx, xt)
+    return float((jnp.argmax(logits, -1) == yt).mean())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--train", action="store_true",
+                    help="also train each variant on synthetic data")
+    args = ap.parse_args()
+    sizes()
+    if args.train:
+        print("== accuracy ordering (synthetic; direction only) ==")
+        for name, fp_stages in STAGES.items():
+            acc = train_variant(fp_stages)
+            print(f"  fp_stages={name:<8} acc={acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""gemma2-27b [dense] — alternating local/global attention, logit softcaps,
+post-sublayer norms, tied + scaled embeddings. [arXiv:2408.00118]"""
+
+from repro.configs.common import ArchSpec
+from repro.models.lm import LMConfig
+from repro.nn.attention import AttnConfig
+from repro.nn.mlp import MLPConfig
+
+
+def _cfg(n_layers, d, heads, kv, dh, ff, vocab, window=4096, q_scalar=None):
+    base = AttnConfig(
+        d_model=d, n_heads=heads, n_kv_heads=kv, d_head=dh,
+        rope_theta=10000.0, logit_softcap=50.0,
+        query_scale=(q_scalar or dh) ** -0.5,
+    )
+    import dataclasses
+    return LMConfig(
+        name="gemma2-27b",
+        n_layers=n_layers,
+        d_model=d,
+        vocab_size=vocab,
+        mixer_pattern=("local_attn", "attn"),  # sliding first, then global
+        attn=base,
+        local_attn=dataclasses.replace(base, window=window),
+        mlp=MLPConfig(d_model=d, d_ff=ff, act="gelu"),
+        post_norm=True,
+        embed_scale=True,
+        tie_embeddings=True,
+        logit_softcap=30.0,
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="gemma2-27b",
+    family="lm",
+    # 27b uses query_pre_attn_scalar = d_model / n_heads = 144
+    config=_cfg(46, 4608, 32, 16, 128, 36864, 256000, q_scalar=144),
+    smoke=_cfg(2, 64, 4, 2, 16, 256, 512, window=32),
+)

@@ -1,0 +1,32 @@
+"""internvl2-1b [vlm] — Qwen2-0.5B backbone + InternViT frontend STUB
+(precomputed patch embeddings, 256 positions, d_vision=1024).
+[arXiv:2404.16821]"""
+
+from repro.configs.common import ArchSpec
+from repro.models.lm import LMConfig
+from repro.nn.attention import AttnConfig
+from repro.nn.mlp import MLPConfig
+
+
+def _cfg(n_layers, d, heads, kv, dh, ff, vocab, prefix, d_vision):
+    return LMConfig(
+        name="internvl2-1b",
+        n_layers=n_layers,
+        d_model=d,
+        vocab_size=vocab,
+        attn=AttnConfig(d_model=d, n_heads=heads, n_kv_heads=kv, d_head=dh,
+                        rope_theta=1_000_000.0, qkv_bias=True),
+        mlp=MLPConfig(d_model=d, d_ff=ff, act="silu"),
+        tie_embeddings=True,
+        vision_prefix=prefix,
+        vocab_pad_to=256,
+        d_vision=d_vision,
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="internvl2-1b",
+    family="lm",
+    config=_cfg(24, 896, 14, 2, 64, 4864, 151655, 256, 1024),
+    smoke=_cfg(2, 64, 2, 2, 32, 160, 512, 8, 48),
+)

@@ -1,0 +1,11 @@
+"""Paper-native: binary LeNet on MNIST (Table 1, Listing 2)."""
+
+from repro.configs.common import ArchSpec
+from repro.models.cnn import LeNetConfig
+
+SPEC = ArchSpec(
+    arch_id="lenet-mnist",
+    family="cnn",
+    config=LeNetConfig(),
+    smoke=LeNetConfig(c1=8, c2=8, fc1=32, in_hw=20),
+)

@@ -1,0 +1,33 @@
+"""recurrentgemma-2b [hybrid] — Griffin: (RG-LRU, RG-LRU, local-attn) cycle,
+MQA kv=1, window 2048.  Sub-quadratic => runs long_500k. [arXiv:2402.19427]"""
+
+from repro.configs.common import ArchSpec
+from repro.models.lm import LMConfig
+from repro.nn.attention import AttnConfig
+from repro.nn.mlp import MLPConfig
+from repro.nn.rglru import RGLRUConfig
+
+
+def _cfg(n_layers, d, heads, kv, dh, ff, vocab, window, n_blocks):
+    return LMConfig(
+        name="recurrentgemma-2b",
+        n_layers=n_layers,
+        d_model=d,
+        vocab_size=vocab,
+        mixer_pattern=("rglru", "rglru", "local_attn"),
+        local_attn=AttnConfig(d_model=d, n_heads=heads, n_kv_heads=kv,
+                              d_head=dh, rope_theta=10000.0, window=window),
+        rglru=RGLRUConfig(d_model=d, d_rnn=d, n_blocks=n_blocks),
+        mlp=MLPConfig(d_model=d, d_ff=ff, act="gelu"),
+        embed_scale=True,
+        tie_embeddings=True,
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="recurrentgemma-2b",
+    family="lm",
+    config=_cfg(26, 2560, 10, 1, 256, 7680, 256000, 2048, 10),
+    smoke=_cfg(3, 64, 2, 1, 32, 160, 512, 32, 2),
+    supports_long=True,
+)

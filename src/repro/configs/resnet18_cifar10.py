@@ -1,0 +1,12 @@
+"""Paper-native: binary ResNet-18 on CIFAR-10 (Table 1) with the 4-stage
+layout used for the partial-binarization study (Table 2)."""
+
+from repro.configs.common import ArchSpec
+from repro.models.cnn import ResNet18Config
+
+SPEC = ArchSpec(
+    arch_id="resnet18-cifar10",
+    family="cnn",
+    config=ResNet18Config(),
+    smoke=ResNet18Config(widths=(8, 8, 16, 16), in_hw=16),
+)

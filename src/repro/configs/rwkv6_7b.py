@@ -1,0 +1,29 @@
+"""rwkv6-7b [ssm] — Finch: attention-free, data-dependent decay WKV6.
+O(1) decode state => runs long_500k. [arXiv:2404.05892]"""
+
+from repro.configs.common import ArchSpec
+from repro.models.lm import LMConfig
+from repro.nn.rwkv6 import RWKV6Config
+
+
+def _cfg(n_layers, d, heads, dh, ff, vocab):
+    return LMConfig(
+        name="rwkv6-7b",
+        n_layers=n_layers,
+        d_model=d,
+        vocab_size=vocab,
+        mixer_pattern=("rwkv6",),
+        ffn_pattern=("rwkv_cmix",),
+        rwkv=RWKV6Config(d_model=d, n_heads=heads, d_head=dh, d_ff=ff),
+        norm="layernorm",
+        embed_norm=True,
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="rwkv6-7b",
+    family="lm",
+    config=_cfg(32, 4096, 64, 64, 14336, 65536),
+    smoke=_cfg(2, 64, 4, 16, 224, 512),
+    supports_long=True,
+)

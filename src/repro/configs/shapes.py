@@ -1,0 +1,28 @@
+"""Assigned input-shape grid (same four shapes for every LM-family arch).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one token against a KV cache
+of seq_len); ``train_*`` lowers ``train_step``; ``prefill_*`` lowers the
+prefill forward.  ``long_500k`` requires sub-quadratic attention and runs
+only for archs with ``supports_long`` (rwkv6, recurrentgemma) — see
+DESIGN.md §4 for the documented skips.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}

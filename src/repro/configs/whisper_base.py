@@ -1,0 +1,19 @@
+"""whisper-base [audio] — enc-dec; conv/mel frontend STUB (precomputed
+frame embeddings, 1500 positions).  Assigned shapes apply to the decoder.
+[arXiv:2212.04356]"""
+
+from repro.configs.common import ArchSpec
+from repro.models.whisper import WhisperConfig
+
+SPEC = ArchSpec(
+    arch_id="whisper-base",
+    family="whisper",
+    config=WhisperConfig(
+        name="whisper-base", n_layers=6, d_model=512, n_heads=8, d_ff=2048,
+        vocab_size=51865, t_enc=1500, max_dec=32768,
+    ),
+    smoke=WhisperConfig(
+        name="whisper-base-smoke", n_layers=2, d_model=64, n_heads=4,
+        d_ff=128, vocab_size=512, t_enc=30, max_dec=64,
+    ),
+)

@@ -1,0 +1,78 @@
+"""Bit-packing utilities — BMXNet §2.2 / §2.2.3.
+
+The paper packs 32 (x86/ARMv7) or 64 (x64) binary weights into one machine
+word (``BINARY_WORD``).  On TPU the natural lane type is ``uint32`` so we use
+WORD_BITS = 32 everywhere.
+
+Conventions (shared by the jnp reference, the Pallas kernels and the model
+converter — tests enforce them):
+
+* a binary value is ``+1`` iff the stored bit is ``1``; ``-1`` iff ``0``.
+* ``sign(0) == +1`` (i.e. the bit for ``x >= 0`` is 1).
+* packing is always along the **last** axis; for a GEMM ``A(M,K) @ B(K,N)``
+  both operands are packed along K, with B stored transposed as ``(N, Kw)``.
+* when K is not a multiple of 32 the tail bits are **0 in both operands**, so
+  they contribute 0 to the xor-mismatch count and the dot product
+  ``dot = K_true - 2 * mismatches`` stays exact.  ``K_true`` therefore has to
+  travel with packed tensors (the converter records it).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+WORD_DTYPE = jnp.uint32
+
+
+def packed_width(k: int) -> int:
+    """Number of uint32 words needed to store ``k`` bits."""
+    return (k + WORD_BITS - 1) // WORD_BITS
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack a boolean array along its last axis into uint32 words.
+
+    ``bits[..., k]`` becomes bit ``k % 32`` of word ``k // 32``.  The tail of
+    the final word is zero-padded.
+    """
+    *lead, k = bits.shape
+    kw = packed_width(k)
+    pad = kw * WORD_BITS - k
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((*lead, pad), dtype=bits.dtype)], axis=-1
+        )
+    bits = bits.reshape(*lead, kw, WORD_BITS).astype(WORD_DTYPE)
+    shifts = jnp.arange(WORD_BITS, dtype=WORD_DTYPE)
+    return (bits << shifts).sum(axis=-1, dtype=WORD_DTYPE)
+
+
+def unpack_bits(words: jax.Array, k_true: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`; returns bool ``(..., k_true)``."""
+    shifts = jnp.arange(WORD_BITS, dtype=WORD_DTYPE)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    *lead, kw, _ = bits.shape
+    return bits.reshape(*lead, kw * WORD_BITS)[..., :k_true].astype(bool)
+
+
+def pack_sign(x: jax.Array) -> jax.Array:
+    """Binarize ``x`` with sign (>= 0 -> +1) and pack along the last axis."""
+    return pack_bits(x >= 0)
+
+
+def unpack_sign(words: jax.Array, k_true: int, dtype=jnp.float32) -> jax.Array:
+    """Unpack to ±1 values of ``dtype``."""
+    bits = unpack_bits(words, k_true)
+    return jnp.where(bits, jnp.ones((), dtype), -jnp.ones((), dtype))
+
+
+def packed_nbytes(shape: tuple[int, ...]) -> int:
+    """Bytes used by a packed tensor whose *unpacked* shape is ``shape``.
+
+    Packing is along the last axis; words are 4 bytes.
+    """
+    *lead, k = shape
+    return int(np.prod(lead, dtype=np.int64)) * packed_width(k) * 4

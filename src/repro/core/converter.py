@@ -1,0 +1,252 @@
+"""Model converter — BMXNet §2.2.3.
+
+Walks a trained float checkpoint (a nested-dict pytree) and, for every layer
+the :class:`QuantPolicy` marks binary, replaces the float weight with its
+bit-packed form:
+
+* dense ``w (d_in, d_out)``      -> ``w_packed (d_out, Kw) uint32``
+* conv ``w (h, w, c_in, c_out)`` -> ``w_packed (c_out, Kw) uint32`` packed
+  along the flattened ``h*w*c_in`` patch axis (+ ``shape_hwio`` metadata)
+
+and optionally a per-output-channel ``scale`` (XNOR-Net alpha).  Everything
+else (first/last layers, norms, biases, recurrence gates) is left untouched.
+
+``convert(...)`` returns the new pytree plus a :class:`SizeReport` with the
+paper's accounting: float bytes before, bytes after, compression ratio
+(ResNet-18: 44.7 MB -> 1.5 MB, 29x — reproduced in benchmarks/model_size.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitpack
+from repro.core.policy import QuantPolicy
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class LeafReport:
+    path: str
+    shape: tuple[int, ...]
+    bytes_fp32: int
+    bytes_after: int
+    packed: bool
+
+
+@dataclasses.dataclass
+class SizeReport:
+    leaves: list[LeafReport]
+
+    @property
+    def bytes_fp32(self) -> int:
+        return sum(l.bytes_fp32 for l in self.leaves)
+
+    @property
+    def bytes_after(self) -> int:
+        return sum(l.bytes_after for l in self.leaves)
+
+    @property
+    def ratio(self) -> float:
+        return self.bytes_fp32 / max(self.bytes_after, 1)
+
+    @property
+    def n_packed(self) -> int:
+        return sum(1 for l in self.leaves if l.packed)
+
+    def summary(self) -> str:
+        return (
+            f"fp32={self.bytes_fp32 / 1e6:.2f}MB "
+            f"packed={self.bytes_after / 1e6:.2f}MB "
+            f"ratio={self.ratio:.1f}x ({self.n_packed} layers packed)"
+        )
+
+
+def _walk(tree: Pytree, prefix: str = ""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _walk(tree[k], f"{prefix}/{k}" if prefix else str(k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _walk(v, f"{prefix}/{i}" if prefix else str(i))
+    else:
+        yield prefix, tree
+
+
+def _fp32_bytes(x) -> int:
+    return int(np.prod(x.shape, dtype=np.int64)) * 4  # paper stores fp32
+
+
+def convert(
+    params: Pytree, policy: QuantPolicy, *, keep_float: bool = False
+) -> tuple[Pytree, SizeReport]:
+    """Pack all binary-policy weights.  Pure host-side transformation.
+
+    ``keep_float`` additionally retains the float weight next to the packed
+    one (useful for tests comparing both paths on the same checkpoint).
+    """
+    report = SizeReport(leaves=[])
+
+    def rec(node: Pytree, path: str) -> Pytree:
+        if isinstance(node, (list, tuple)):
+            return type(node)(
+                rec(v, f"{path}/{i}" if path else str(i))
+                for i, v in enumerate(node)
+            )
+        if not isinstance(node, dict):
+            report.leaves.append(
+                LeafReport(path, tuple(node.shape), _fp32_bytes(node),
+                           int(node.size * np.dtype(node.dtype).itemsize),
+                           False)
+            )
+            return node
+        spec = policy.spec(path) if path else None
+        if (
+            "w" in node
+            and not isinstance(node["w"], dict)
+            and node["w"].ndim in (2, 4)
+            and spec is not None
+            and spec.is_binary
+            and spec.a_bits == 1
+        ):
+            return _pack_layer(node, path, spec, report, keep_float)
+        if (
+            "up" in node
+            and not isinstance(node.get("up"), dict)
+            and getattr(node.get("up"), "ndim", 0) == 3
+            and spec is not None
+            and spec.is_binary
+            and spec.a_bits == 1
+        ):  # MoE expert stack (E, d_in, d_out): pack along d_in per expert
+            return _pack_experts(node, path, report, keep_float)
+        return {k: rec(v, f"{path}/{k}" if path else k) for k, v in node.items()}
+
+    return rec(params, ""), report
+
+
+def _pack_experts(node, path, report: SizeReport, keep_float: bool):
+    out = {}
+    for name, w in node.items():  # up / gate / down, each (E, d_in, d_out)
+        e, d_in, d_out = w.shape
+        flat = jnp.transpose(jnp.asarray(w), (0, 2, 1))  # (E, d_out, d_in)
+        w_packed = bitpack.pack_sign(flat)  # (E, d_out, Kw)
+        out[name + "_packed"] = w_packed
+        if keep_float:
+            out[name] = w
+        report.leaves.append(
+            LeafReport(f"{path}/{name}", tuple(w.shape), _fp32_bytes(w),
+                       int(w_packed.size * 4), True)
+        )
+    return out
+
+
+def _pack_layer(node, path, spec, report: SizeReport, keep_float: bool):
+    w = node["w"]
+    if w.ndim == 2:  # (d_in, d_out)
+        flat = w.T  # (d_out, d_in); pack along contraction axis
+        meta = {}
+        alpha_axes = (0,)
+    else:  # (h, w, c_in, c_out)
+        h, ww, c_in, c_out = w.shape
+        flat = w.reshape(h * ww * c_in, c_out).T
+        meta = {"shape_hwio": np.array([h, ww, c_in, c_out])}
+        alpha_axes = (0, 1, 2)
+
+    w_packed = bitpack.pack_sign(jnp.asarray(flat))
+    out = dict(meta)
+    out["w_packed"] = w_packed
+    if spec.scale:
+        out["scale"] = jnp.mean(jnp.abs(w), axis=alpha_axes)
+    if keep_float:
+        out["w"] = w
+    if "b" in node:
+        out["b"] = node["b"]
+
+    after = int(w_packed.size * 4)
+    if spec.scale:
+        after += int(out["scale"].size * 4)
+    if "b" in node:
+        after += _fp32_bytes(node["b"])
+    report.leaves.append(
+        LeafReport(f"{path}/w", tuple(w.shape), _fp32_bytes(w) +
+                   (_fp32_bytes(node["b"]) if "b" in node else 0),
+                   after, True)
+    )
+    return out
+
+
+def abstract_packed(params: Pytree, policy: QuantPolicy) -> Pytree:
+    """Shape-only version of :func:`convert` for the multi-pod dry-run:
+    maps a pytree of ShapeDtypeStructs to the packed layout without
+    touching any data."""
+    import jax.numpy as _jnp
+
+    def rec(node: Pytree, path: str) -> Pytree:
+        if isinstance(node, (list, tuple)):
+            return type(node)(
+                rec(v, f"{path}/{i}" if path else str(i))
+                for i, v in enumerate(node)
+            )
+        if not isinstance(node, dict):
+            return node
+        spec = policy.spec(path) if path else None
+        if (
+            "w" in node
+            and not isinstance(node["w"], dict)
+            and len(node["w"].shape) in (2, 4)
+            and spec is not None
+            and spec.is_binary
+            and spec.a_bits == 1
+        ):
+            w = node["w"]
+            if len(w.shape) == 2:
+                d_in, d_out = w.shape
+                meta = {}
+            else:
+                h, ww, c_in, d_out = w.shape
+                d_in = h * ww * c_in
+                meta = {"shape_hwio": jax.ShapeDtypeStruct((4,), _jnp.int64)}
+            out = dict(meta)
+            out["w_packed"] = jax.ShapeDtypeStruct(
+                (d_out, bitpack.packed_width(d_in)), _jnp.uint32
+            )
+            if spec.scale:
+                out["scale"] = jax.ShapeDtypeStruct((d_out,), _jnp.float32)
+            if "b" in node:
+                out["b"] = node["b"]
+            return out
+        if (
+            "up" in node
+            and not isinstance(node.get("up"), dict)
+            and len(getattr(node.get("up"), "shape", ())) == 3
+            and spec is not None
+            and spec.is_binary
+            and spec.a_bits == 1
+        ):
+            out = {}
+            for name, w in node.items():
+                e, d_in, d_out = w.shape
+                out[name + "_packed"] = jax.ShapeDtypeStruct(
+                    (e, d_out, bitpack.packed_width(d_in)), _jnp.uint32
+                )
+            return out
+        return {k: rec(v, f"{path}/{k}" if path else k) for k, v in node.items()}
+
+    return rec(params, "")
+
+
+def model_nbytes(params: Pytree, *, as_fp32: bool = True) -> int:
+    """Size of a checkpoint in bytes (paper counts fp32 storage)."""
+    total = 0
+    for _, leaf in _walk(params):
+        if as_fp32 and jnp.issubdtype(leaf.dtype, jnp.floating):
+            total += _fp32_bytes(leaf)
+        else:
+            total += int(leaf.size * np.dtype(leaf.dtype).itemsize)
+    return total

@@ -1,0 +1,226 @@
+"""Quantized layers — BMXNet's QFullyConnected / QConvolution / QActivation
+as JAX functions.
+
+Two execution paths per layer, switched by what the params pytree contains:
+
+* **train / fake-quant** (params have ``w``): weights and activations are
+  quantized with STE and the contraction runs on the MXU in ``compute_dtype``
+  — the paper's GPU-training path (§2.2.2), bit-exact with the packed path.
+* **packed serving** (params have ``w_packed``): weights are stored as uint32
+  words (32 per word, paper §2.2.3); activations are binarized+packed on the
+  fly and the contraction is the Pallas xnor GEMM (``kernels/ops.binary_dot``).
+
+Packed layout: ``w_packed`` is ``(d_out, Kw)`` — the *transposed* weight
+packed along the contraction axis, which is the layout the xnor GEMM wants
+and the layout the model converter emits.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.policy import QuantSpec
+from repro.kernels import ops
+
+Params = dict[str, Any]
+
+
+def dense_init(
+    key: jax.Array,
+    d_in: int,
+    d_out: int,
+    *,
+    bias: bool = False,
+    dtype=jnp.float32,
+    scale: float | None = None,
+) -> Params:
+    """Init a (quantizable) dense layer.  LeCun-normal by default."""
+    std = scale if scale is not None else d_in**-0.5
+    p: Params = {"w": jax.random.normal(key, (d_in, d_out), dtype) * std}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def qdense(
+    params: Params,
+    x: jax.Array,
+    spec: QuantSpec,
+    *,
+    compute_dtype=jnp.bfloat16,
+    xnor_backend: str = "vpu",
+) -> jax.Array:
+    """Apply a dense layer under a :class:`QuantSpec`.
+
+    Returns ``(..., d_out)`` in ``compute_dtype`` (packed path returns the
+    same values — §2.2.2's exact-match invariant, enforced by tests).
+    """
+    if "w_packed" in params:
+        return _qdense_packed(
+            params, x, spec, compute_dtype=compute_dtype, backend=xnor_backend
+        )
+
+    w = params["w"]
+    d_in = w.shape[0]
+    if spec.is_fp:
+        y = jnp.matmul(x.astype(compute_dtype), w.astype(compute_dtype))
+    else:
+        wq = quant.quantize_weight(w.astype(jnp.float32), spec.w_bits)
+        xq = quant.quantize_act(x.astype(jnp.float32), spec.a_bits)
+        y = jnp.matmul(xq.astype(compute_dtype), wq.astype(compute_dtype))
+        if spec.scale:
+            y = y * quant.weight_scale(w)[0].astype(compute_dtype)
+        if spec.xnor_range and spec.is_binary and spec.a_bits == 1:
+            y = quant.xnor_range_map(y, d_in)
+    if "b" in params:
+        y = y + params["b"].astype(compute_dtype)
+    return y.astype(compute_dtype)
+
+
+def _qdense_packed(
+    params: Params, x: jax.Array, spec: QuantSpec, *, compute_dtype, backend
+) -> jax.Array:
+    assert spec.is_binary and spec.a_bits == 1, (
+        "packed serving is the 1-bit path; k-bit weights stay fake-quantized"
+    )
+    k_true = x.shape[-1]
+    dot = ops.binary_dot(
+        x.astype(jnp.float32),
+        params["w_packed"],
+        k_true=k_true,
+        backend=backend,
+        out_dtype=jnp.float32,
+    )
+    if spec.scale:
+        dot = dot * params["scale"]
+    if spec.xnor_range:
+        dot = quant.xnor_range_map(dot, k_true)
+    if "b" in params:
+        dot = dot + params["b"]
+    return dot.astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# QConvolution: 2D conv for the paper-fidelity CNNs (LeNet / ResNet-18).
+# Train path uses lax.conv on fake-quantized weights; packed path is
+# im2col + the packed GEMM (exactly how BMXNet implements binary conv).
+# ---------------------------------------------------------------------------
+
+
+def conv_init(
+    key: jax.Array,
+    h: int,
+    w: int,
+    c_in: int,
+    c_out: int,
+    *,
+    dtype=jnp.float32,
+) -> Params:
+    fan_in = h * w * c_in
+    return {"w": jax.random.normal(key, (h, w, c_in, c_out), dtype) * fan_in**-0.5}
+
+
+def qconv(
+    params: Params,
+    x: jax.Array,  # NHWC
+    spec: QuantSpec,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    compute_dtype=jnp.bfloat16,
+    xnor_backend: str = "vpu",
+) -> jax.Array:
+    if "w_packed" in params:
+        return _qconv_packed(
+            params, x, spec, stride=stride, padding=padding,
+            compute_dtype=compute_dtype, backend=xnor_backend,
+        )
+    w = params["w"]
+    if spec.is_fp:
+        wq, xq = w, x
+    else:
+        wq = quant.quantize_weight(w.astype(jnp.float32), spec.w_bits)
+        xq = quant.quantize_act(x.astype(jnp.float32), spec.a_bits)
+        if spec.is_binary and spec.a_bits == 1 and padding == "SAME":
+            # binary conv pads with -1 (bit 0) AFTER binarization so the
+            # train path and the packed im2col path see identical patches
+            xq = _pad_same_pm1(xq, w.shape[0], w.shape[1], stride)
+            padding = "VALID"
+    y = jax.lax.conv_general_dilated(
+        xq.astype(compute_dtype),
+        wq.astype(compute_dtype),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if not spec.is_fp and spec.scale:
+        alpha = jnp.mean(jnp.abs(w), axis=(0, 1, 2))
+        y = y * alpha.astype(compute_dtype)
+    if not spec.is_fp and spec.xnor_range and spec.is_binary and spec.a_bits == 1:
+        y = quant.xnor_range_map(y, w.shape[0] * w.shape[1] * w.shape[2])
+    return y.astype(compute_dtype)
+
+
+def _pad_same_pm1(x: jax.Array, h: int, w: int, stride: int) -> jax.Array:
+    """SAME-geometry padding with -1 (the binary pad value, bit 0)."""
+    _, xh, xw, _ = x.shape
+    oh, ow = -(-xh // stride), -(-xw // stride)
+    ph = max((oh - 1) * stride + h - xh, 0)
+    pw = max((ow - 1) * stride + w - xw, 0)
+    return jnp.pad(
+        x,
+        ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0)),
+        constant_values=-1.0,
+    )
+
+
+def _im2col(x: jax.Array, h: int, w: int, stride: int, padding: str):
+    """(N,H,W,C) -> (N*OH*OW, h*w*C) patches, matching HWIO weight flatten."""
+    n, xh, xw, c = x.shape
+    if padding == "SAME":
+        oh = -(-xh // stride)
+        ow = -(-xw // stride)
+        ph = max((oh - 1) * stride + h - xh, 0)
+        pw = max((ow - 1) * stride + w - xw, 0)
+        # pad value -1 => bit 0, matching packed-weight pad convention; the
+        # float oracle uses the same pad so both paths see identical patches
+        x = jnp.pad(
+            x,
+            ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0)),
+            constant_values=-1.0,
+        )
+    else:
+        oh = (xh - h) // stride + 1
+        ow = (xw - w) // stride + 1
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(h, w),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (N, OH, OW, C*h*w) with feature order (C, h, w)
+    patches = patches.reshape(n, oh, ow, c, h, w)
+    patches = patches.transpose(0, 1, 2, 4, 5, 3)  # -> (..., h, w, C)
+    return patches.reshape(n * oh * ow, h * w * c), (n, oh, ow)
+
+
+def _qconv_packed(
+    params, x, spec, *, stride, padding, compute_dtype, backend
+):
+    h, w, c_in, c_out = params["shape_hwio"]
+    cols, (n, oh, ow) = _im2col(
+        x.astype(jnp.float32), h, w, stride, padding
+    )
+    dot = ops.binary_dot(
+        cols, params["w_packed"], k_true=h * w * c_in, backend=backend,
+        out_dtype=jnp.float32,
+    )
+    if spec.scale:
+        dot = dot * params["scale"]
+    if spec.xnor_range:
+        dot = quant.xnor_range_map(dot, h * w * c_in)
+    return dot.reshape(n, oh, ow, c_out).astype(compute_dtype)

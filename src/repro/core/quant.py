@@ -1,0 +1,98 @@
+"""Quantizers — BMXNet §2.1 (Eq. 1), §2.2 (binarization), §2.2.2 (Eq. 2).
+
+All quantizers are straight-through-estimator (STE) functions: forward is the
+discrete map, backward passes the gradient through (clipped for sign, as in
+XNOR-Net / BinaryConnect, which BMXNet follows).
+
+``act_bit`` semantics follow the paper exactly:
+  * 32      -> identity (full precision)
+  * 1       -> binarization with ``sign`` into {-1, +1}
+  * 2..31   -> DoReFa linear quantization (Eq. 1) on the appropriate range
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FULL_PRECISION = 32
+
+
+def _ste(x: jax.Array, q: jax.Array) -> jax.Array:
+    """Forward ``q``, gradient of identity w.r.t. ``x``."""
+    return x + jax.lax.stop_gradient(q - x)
+
+
+@jax.custom_vjp
+def sign_ste(x: jax.Array) -> jax.Array:
+    """sign into {-1,+1} with sign(0)=+1; clipped STE: dy/dx = 1[|x|<=1]."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _sign_fwd(x):
+    return sign_ste(x), x
+
+
+def _sign_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+sign_ste.defvjp(_sign_fwd, _sign_bwd)
+
+
+def quantize_k(x: jax.Array, k: int) -> jax.Array:
+    """Paper Eq. 1: quantize ``x`` in [0,1] onto the k-bit grid, with STE.
+
+        quantize(input, k) = round((2^k - 1) * input) / (2^k - 1)
+    """
+    n = float(2**k - 1)
+    return _ste(x, jnp.round(x * n) / n)
+
+
+def quantize_act(x: jax.Array, bits: int) -> jax.Array:
+    """QActivation: binarize (1 bit) or DoReFa-quantize activations.
+
+    1 bit  -> sign(x) in {-1,+1}   (xnor-compatible)
+    k bits -> quantize_k(clip(x, 0, 1), k)   (DoReFa activation quantizer)
+    32     -> identity
+    """
+    if bits >= FULL_PRECISION:
+        return x
+    if bits == 1:
+        return sign_ste(x)
+    return quantize_k(jnp.clip(x, 0.0, 1.0), bits)
+
+
+def quantize_weight(w: jax.Array, bits: int) -> jax.Array:
+    """Weight quantizer used by QConvolution / QFullyConnected.
+
+    1 bit  -> sign(w) in {-1,+1}
+    k bits -> DoReFa: 2 * quantize_k(tanh(w)/(2 max|tanh(w)|) + 1/2, k) - 1
+    32     -> identity
+    """
+    if bits >= FULL_PRECISION:
+        return w
+    if bits == 1:
+        return sign_ste(w)
+    t = jnp.tanh(w)
+    t = t / (2.0 * jnp.max(jnp.abs(t)) + 1e-12) + 0.5
+    return 2.0 * quantize_k(t, bits) - 1.0
+
+
+def weight_scale(w: jax.Array, axis: int = 0) -> jax.Array:
+    """Per-output-channel alpha = mean|W| (XNOR-Net style, optional in BMXNet).
+
+    ``axis`` is the contraction (input) axis of the weight.
+    """
+    return jnp.mean(jnp.abs(w), axis=axis, keepdims=True)
+
+
+def xnor_range_map(dot: jax.Array, n: int) -> jax.Array:
+    """Paper Eq. 2: map a ±1 dot product in [-n, n] (step 2) to the
+    xnor+popcount count in [0, n] (step 1): out = (dot + n) / 2."""
+    return (dot + n) / 2
+
+
+def dot_range_map(counts: jax.Array, n: int) -> jax.Array:
+    """Inverse of Eq. 2: xnor match count -> ±1 dot product."""
+    return 2 * counts - n

@@ -1,0 +1,52 @@
+"""Pallas kernel: binarize (sign) + bit-pack along the last axis.
+
+This is the "binarize input" stage the paper measures in Figure 1
+(``binarize input and xnor_64_omp``): activations arrive as floats and must
+be packed before the xnor GEMM.  One fused VMEM pass: read a (bm, bkw*32)
+float tile, emit a (bm, bkw) uint32 tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bitpack import WORD_BITS
+
+DEFAULT_BM = 256
+DEFAULT_BKW = 32  # words per block: 32 * 32 = 1024 floats per row-block
+
+
+def _pack_kernel(x_ref, out_ref):
+    x = x_ref[...]  # (bm, bkw * 32) float
+    bm, kbits = x.shape
+    bits = (x >= 0).astype(jnp.uint32).reshape(bm, kbits // WORD_BITS, WORD_BITS)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    out_ref[...] = (bits << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bkw", "interpret"))
+def pack_sign_pallas(
+    x: jax.Array,  # (M, K) float; M % bm == 0, K % (bkw*32) == 0 (pre-padded)
+    *,
+    bm: int = DEFAULT_BM,
+    bkw: int = DEFAULT_BKW,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (M, K/32) uint32.  Pad K with negative values (bit 0) first;
+    ops.py handles the padding so pad bits are 0 in both GEMM operands."""
+    m, k = x.shape
+    kb = bkw * WORD_BITS
+    assert m % bm == 0 and k % kb == 0, (m, bm, k, kb)
+    grid = (m // bm, k // kb)
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, kb), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bkw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k // WORD_BITS), jnp.uint32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,57 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth every kernel test asserts against, and the XLA
+fallback used when Pallas is unavailable (``ops.py`` picks the backend).
+
+Semantics (see core/bitpack.py for the bit conventions):
+
+``xnor_gemm_ref(a_packed, b_packed, k_true)`` computes the ±1 dot product
+
+    dot[i, j] = sum_k a[i, k] * b[j, k]        a, b in {-1, +1}
+
+from packed operands, as ``k_true - 2 * popcount(xor)`` — mathematically the
+paper's xnor+popcount GEMM (Listing 3) followed by the inverse of Eq. 2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+
+
+def pack_sign_ref(x: jax.Array) -> jax.Array:
+    """Binarize (sign, >=0 -> +1) and pack along the last axis."""
+    return bitpack.pack_sign(x)
+
+
+def xnor_gemm_ref(
+    a_packed: jax.Array,  # (M, Kw) uint32
+    b_packed: jax.Array,  # (N, Kw) uint32   (B stored transposed)
+    k_true: int,
+    out_dtype=jnp.int32,
+) -> jax.Array:
+    """±1 dot product from packed bits: (M, N) int32."""
+    mism = jax.lax.population_count(a_packed[:, None, :] ^ b_packed[None, :, :])
+    mism = mism.astype(out_dtype).sum(axis=-1)
+    return k_true - 2 * mism
+
+
+def xnor_counts_ref(a_packed, b_packed, k_true) -> jax.Array:
+    """The paper's raw xnor+popcount output: number of matching bit pairs,
+    in [0, k_true] step 1 (Listing 3 semantics)."""
+    mism = jax.lax.population_count(a_packed[:, None, :] ^ b_packed[None, :, :])
+    return k_true - mism.astype(jnp.int32).sum(axis=-1)
+
+
+def sign_gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Float oracle: binarize both operands with sign and matmul.
+
+    ``a`` is (M, K); ``b`` is (K, N).  This is the training-path semantics
+    (BLAS/MXU dot over ±1 values) that §2.2.2 guarantees to exactly match the
+    xnor path.
+    """
+    sa = jnp.where(a >= 0, 1.0, -1.0).astype(jnp.float32)
+    sb = jnp.where(b >= 0, 1.0, -1.0).astype(jnp.float32)
+    return sa @ sb

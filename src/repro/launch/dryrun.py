@@ -1,0 +1,403 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+# The two lines above MUST run before any jax import (jax locks the device
+# count on first init).  Everything below is ordinary.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, without allocating a single model array:
+
+  * proof the sharding config is coherent (compile succeeds),
+  * ``compiled.memory_analysis()``  -> bytes/device (fits in 16 GB v5e HBM?),
+  * ``compiled.cost_analysis()``    -> HLO FLOPs + bytes for §Roofline,
+  * collective bytes parsed from the HLO (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute operand sizes),
+  * the resolver's demotion log (which dims could not shard and why).
+
+Results are written as JSON under experiments/dryrun/ and summarised in
+EXPERIMENTS.md.  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+      --shape decode_32k [--multi-pod] [--quant fp|binary|binary_packed]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.core.policy import QuantPolicy
+from repro.dist.sharding import Resolver
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm as lm_model
+from repro.models import registry
+from repro.nn.common import QCtx
+
+# ---------------------------------------------------------------------------
+# hardware model (TPU v5e) — §Roofline constants
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_TUPLE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+# computation defs start at column 0: '%name (args...) -> ...' (args may
+# contain nested tuple parens, so only the leading name is parsed)
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s")
+
+
+def collective_bytes(hlo: str, loop_trip: int | None = None) -> dict:
+    """Sum result bytes per collective kind (result size ~ wire traffic per
+    device for ring algorithms; all-reduce counted twice: reduce-scatter +
+    all-gather phases).
+
+    ``loop_trip``: if given, collectives inside while-loop bodies are
+    multiplied by the trip count (scan-over-layers cost correction)."""
+    body_names: set[str] = set()
+    if loop_trip:
+        for line in hlo.splitlines():
+            if " while(" in line:
+                m = _WHILE_BODY_RE.search(line)
+                if m:
+                    body_names.add(m.group(1))
+
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    current_comp = ""
+    for line in hlo.splitlines():
+        if line and not line.startswith(" "):
+            h = _COMP_HEADER_RE.match(line.strip())
+            if h:
+                current_comp = h.group(1)
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        if m.group(1):  # simple result shape
+            nbytes = _shape_bytes(m.group(1), m.group(2))
+        else:  # tuple result: sum components before the op name
+            head = line.split(kind)[0]
+            nbytes = sum(_shape_bytes(d, s) for d, s in _TUPLE_RE.findall(head))
+        if "-done(" in line:
+            continue  # avoid double counting start/done pairs
+        mult = 2 if kind == "all-reduce" else 1
+        if loop_trip and current_comp in body_names:
+            mult *= loop_trip
+        out[kind] += nbytes * mult
+    out["total"] = sum(out.values())
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+def _attn_flops_fwd(cfg, shape: ShapeSpec) -> float:
+    """Analytic token-mixing flops (fwd): attention is quadratic so the
+    6·N·D estimate misses it; inner lax.scan bodies (chunked attention,
+    WKV) are counted once by HLO cost analysis, so the roofline compute
+    term uses max(HLO, analytic)."""
+    b = shape.global_batch
+    if shape.kind == "decode":
+        s_q, s_kv = 1.0, float(shape.seq_len)
+    else:
+        s_q = s_kv = float(shape.seq_len)
+    total = 0.0
+    if getattr(cfg, "n_layers", None) is None:
+        return 0.0
+    for i in range(cfg.n_layers):
+        kind = cfg.mixer_kind(i)
+        if kind == "attn":
+            a = cfg.attn
+            eff = s_kv / 2 if (shape.kind != "decode") else s_kv
+            total += 4.0 * b * s_q * eff * a.n_heads * a.d_head
+        elif kind == "local_attn":
+            a = cfg.local_attn
+            w = min(a.window or s_kv, s_kv)
+            total += 4.0 * b * s_q * w * a.n_heads * a.d_head
+        elif kind == "rwkv6":
+            r = cfg.rwkv
+            dh, h, c = r.d_head, r.n_heads, r.chunk
+            if shape.kind == "decode":
+                total += b * h * (4.0 * dh * dh)
+            else:
+                total += b * s_q * h * (4.0 * dh * dh + 2.0 * c * dh)
+        elif kind == "rglru":
+            r = cfg.rglru
+            bs = r.d_rnn // r.n_blocks
+            total += b * s_q * (4.0 * r.d_rnn * bs + 12.0 * r.d_rnn)
+    return total
+
+
+def model_flops(spec, cfg, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS: 6·N_active·D (train) / 2·N_active·D (fwd-only) plus the
+    analytic token-mixing (attention/recurrence) term."""
+    params = specs_lib.abstract_params(spec, cfg)
+    total = sum(x.size for x in jax.tree.leaves(params))
+    # active params for MoE: replace routed-expert count by top_k
+    active = total
+    if getattr(cfg, "moe", None) is not None:
+        e_params = cfg.moe.e * cfg.moe.d_expert * cfg.d_model * 3
+        per_layer_active = cfg.moe.top_k * cfg.moe.d_expert * cfg.d_model * 3
+        n_moe_layers = sum(
+            1 for i in range(cfg.n_layers) if cfg.ffn_kind(i) == "moe"
+        )
+        active = total - n_moe_layers * (e_params - per_layer_active)
+
+    if spec.family == "whisper":
+        b, s = shape.global_batch, shape.seq_len
+        t_enc = cfg.t_enc
+        h, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+        if shape.kind == "decode":
+            mix = 4.0 * b * (s + t_enc) * h * dh * cfg.n_layers
+            return 2.0 * active * b + mix
+        enc = 4.0 * b * t_enc * t_enc * h * dh * cfg.n_layers
+        dec = (2.0 * b * s * s + 4.0 * b * s * t_enc) * h * dh * cfg.n_layers
+        mult = 3.0 if shape.kind == "train" else 1.0
+        return mult * (2.0 * active * b * s + enc + dec)
+
+    mix_fwd = _attn_flops_fwd(cfg, shape)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens + 3.0 * mix_fwd
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens + mix_fwd
+    return 2.0 * active * shape.global_batch + mix_fwd
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             quant: str, outdir: str | None,
+             seq_parallel: bool = False,
+             microbatch: int | None = None) -> dict:
+    spec = registry.get(arch_id)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    if shape_name == "long_500k" and not spec.supports_long:
+        return {"arch": arch_id, "shape": shape_name, "status": "skipped",
+                "reason": "full-attention arch; sub-quadratic required "
+                          "(DESIGN.md §4)"}
+
+    if quant == "fp":
+        policy, packed = QuantPolicy.full_precision(), None
+    elif quant == "binary":
+        policy, packed = QuantPolicy.binary(), None
+    elif quant == "binary_packed":
+        policy = QuantPolicy.binary()
+        packed = policy if shape.kind != "train" else None
+    else:
+        raise ValueError(quant)
+
+    ctx = QCtx(policy=policy, compute_dtype=jnp.bfloat16, xnor_backend="xla",
+               mesh=mesh)
+    rs = Resolver(mesh)
+
+    def lower_cell(scan_blocks: bool):
+        cell = specs_lib.make_cell(spec, spec.config, ctx, shape,
+                                   packed_policy=packed, resolver=rs,
+                                   scan_blocks=scan_blocks,
+                                   seq_parallel=seq_parallel,
+                                   microbatch=microbatch)
+        shardings = tuple(rs.shardings(p) for p in cell.pspecs(rs))
+        with mesh:
+            jitted = jax.jit(cell.fn, in_shardings=shardings,
+                             donate_argnums=cell.donate)
+            return jitted.lower(*cell.args)
+
+    # Train cells (lm): compile the SCANNED form only (the production
+    # pattern; unrolled compiles take 10-25 min for the big archs and the
+    # CPU scheduler does not reuse buffers across an unrolled layer loop
+    # anyway — measured, DESIGN.md §8).  FLOPs come from cost_analysis on
+    # the UNROLLED *lowering* (no compile, global pre-SPMD numbers — a
+    # while body is counted once by HLO cost analysis), and in-loop
+    # collectives from the scanned HLO are scaled by the trip count.
+    scan_train = shape.kind == "train" and spec.family == "lm"
+    t0 = time.time()
+    lowered = lower_cell(scan_blocks=scan_train)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    with mesh:
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    loop_trip = None
+    flops_global = None
+    if scan_train:
+        cfg = spec.config
+        cycle = lm_model._cycle_len(cfg)
+        loop_trip = (cfg.n_layers - cfg.first_dense_layers) // cycle
+        unrolled = lower_cell(scan_blocks=False)
+        flops_global = float(unrolled.cost_analysis().get("flops", 0.0))
+
+    # NOTE semantics: after SPMD partitioning both cost_analysis() and
+    # memory_analysis() report PER-DEVICE numbers (shapes in the partitioned
+    # module are per-shard) — verified against hand-computed cache/param
+    # sizes.  'bytes accessed' sums every instruction's operands+outputs
+    # (pre-fusion on the CPU backend), i.e. a pessimistic upper bound on HBM
+    # traffic; buffer sizes (args+temp+out) are the optimistic lower bound.
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo, loop_trip=loop_trip)
+
+    if flops_global is None:
+        flops = float(cost.get("flops", 0.0))  # per device
+        flops_global = flops * n_chips
+    else:
+        flops = flops_global / n_chips  # global lowering / chips
+    bytes_acc = float(cost.get("bytes accessed", 0.0))  # per device
+    mf = model_flops(spec, spec.config, shape)
+
+    arg_b = int(getattr(mem, "argument_size_in_bytes", 0) or 0)
+    tmp_b = int(getattr(mem, "temp_size_in_bytes", 0) or 0)
+    out_b = int(getattr(mem, "output_size_in_bytes", 0) or 0)
+    alias_b = int(getattr(mem, "alias_size_in_bytes", 0) or 0)
+    buffer_traffic = arg_b + tmp_b + out_b - alias_b
+
+    # memory term: buffer traffic (every arg/temp/output buffer crosses HBM
+    # at least once).  cost_analysis 'bytes accessed' is recorded alongside
+    # but counts per-instruction I/O pre-fusion (measured 500x too high on
+    # the CPU backend) — see EXPERIMENTS.md §Roofline for the methodology.
+    # compute term: max(HLO, analytic) — HLO undercounts inner lax.scan
+    # bodies (chunked attention at 32k, WKV chunks), analytic misses
+    # elementwise/softmax overheads; the max is the defensible lower bound.
+    compute_s = max(flops, mf / n_chips) / PEAK_FLOPS
+    memory_s = buffer_traffic / HBM_BW
+    coll_s = coll["total"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    bottleneck = max(terms, key=terms.get)
+
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "quant": quant + ("+sp" if seq_parallel else "")
+                 + (f"+mb{microbatch}" if microbatch else ""),
+        "status": "ok",
+        "chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "argument_bytes": arg_b,
+        "temp_bytes": tmp_b,
+        "output_bytes": out_b,
+        "alias_bytes": alias_b,
+        "peak_bytes": arg_b + tmp_b,
+        "buffer_traffic_lb": buffer_traffic,
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_acc,
+        "hlo_flops_global": flops_global,
+        "model_flops": mf,
+        "useful_flop_frac": mf / flops_global if flops_global else None,
+        "collectives": coll,
+        "roofline": terms,
+        "bottleneck": bottleneck,
+        "step_time_lb_s": max(terms.values()),
+        "demotions": rs.demotion_log(),
+    }
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        tag = f"{arch_id}_{shape_name}_{rec['mesh']}_{quant}"
+        with open(os.path.join(outdir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def _fmt(rec: dict) -> str:
+    if rec["status"] != "ok":
+        return (f"{rec['arch']:<18} {rec['shape']:<12} SKIP "
+                f"({rec.get('reason', '')[:60]})")
+    t = rec["roofline"]
+    return (
+        f"{rec['arch']:<18} {rec['shape']:<12} {rec['mesh']:<8} "
+        f"{rec['quant']:<13} "
+        f"comp={t['compute_s']:.2e}s mem={t['memory_s']:.2e}s "
+        f"coll={t['collective_s']:.2e}s -> {rec['bottleneck'][:-2]:<10} "
+        f"peak={_gb(rec['peak_bytes'])}/dev "
+        f"useful={100 * (rec['useful_flop_frac'] or 0):.0f}% "
+        f"compile={rec['compile_s']:.0f}s"
+    )
+
+
+def _gb(b):
+    return f"{(b or 0) / 2**30:.2f}GB"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--quant", default="fp",
+                    choices=["fp", "binary", "binary_packed"])
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="Megatron-SP residual sharding (train cells)")
+    ap.add_argument("--microbatch", type=int, default=None,
+                    help="gradient-accumulation microbatches (train cells)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every assigned (arch x shape) cell")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for a in registry.ASSIGNED:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    for arch_id, shape_name in cells:
+        try:
+            rec = run_cell(arch_id, shape_name, multi_pod=args.multi_pod,
+                           quant=args.quant, outdir=args.out,
+                           seq_parallel=args.seq_parallel,
+                           microbatch=args.microbatch)
+            print(_fmt(rec), flush=True)
+        except Exception as e:  # a failed cell is a bug in the system
+            failures += 1
+            print(f"{arch_id:<18} {shape_name:<12} FAILED: {e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

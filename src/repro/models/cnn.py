@@ -1,0 +1,168 @@
+"""Paper-fidelity CNNs: binary LeNet (Listing 2) and ResNet-18.
+
+These are the models BMXNet itself evaluates (Table 1/2).  Block structure
+follows the paper exactly: *QActivation -> QConv/QFC -> BatchNorm -> Pool*,
+with the first conv and the last FC always full precision.  ResNet-18 keeps
+MXNet's 4-ResUnit-stage layout so Table 2's per-stage partial binarization
+maps onto policy rules ("stage1" ... "stage4").
+
+BatchNorm here is the inference/training-free variant (per-channel affine
+after normalising with batch statistics) — sufficient for the fidelity and
+equivalence tests; momentum-tracked running stats are orthogonal to the
+paper's contribution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlayers
+from repro.nn.common import QCtx
+
+Params = dict[str, Any]
+
+
+def _bn_init(c: int) -> Params:
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _bn(params: Params, x: jax.Array, eps=1e-5) -> jax.Array:
+    mu = x.mean(axis=(0, 1, 2), keepdims=True)
+    var = x.var(axis=(0, 1, 2), keepdims=True)
+    xn = (x - mu) * jax.lax.rsqrt(var + eps)
+    return xn * params["scale"] + params["bias"]
+
+
+def _pool(x, window=2, stride=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1), (1, stride, stride, 1),
+        "VALID",
+    )
+
+
+# --------------------------------------------------------------------------
+# LeNet (Table 1, MNIST)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LeNetConfig:
+    name: str = "lenet"
+    n_classes: int = 10
+    c1: int = 64
+    c2: int = 64
+    fc1: int = 1000  # matches the paper's 4.6MB full-precision size
+    in_hw: int = 28
+    in_c: int = 1
+
+
+def lenet_init(key, cfg: LeNetConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    # VALID 5x5 convs + two 2x2 pools (MXNet LeNet): 28->24->12->8->4,
+    # giving fc1 input 4*4*64=1024 and the paper's 4.6MB fp32 size.
+    hw = ((cfg.in_hw - 4) // 2 - 4) // 2
+    return {
+        "first_conv": qlayers.conv_init(ks[0], 5, 5, cfg.in_c, cfg.c1),
+        "bn1": _bn_init(cfg.c1),
+        "conv2": qlayers.conv_init(ks[1], 5, 5, cfg.c1, cfg.c2),
+        "bn2": _bn_init(cfg.c2),
+        "fc1": qlayers.dense_init(ks[2], hw * hw * cfg.c2, cfg.fc1),
+        "bn3": _bn_init(cfg.fc1),
+        "head": qlayers.dense_init(ks[3], cfg.fc1, cfg.n_classes),
+    }
+
+
+def lenet_forward(params, cfg: LeNetConfig, ctx: QCtx, images) -> jax.Array:
+    """images: (B, H, W, C) -> logits (B, n_classes).
+
+    Paper Listing 2: conv1 (fp) -> pool -> bn -> QConv -> bn -> pool ->
+    QFC -> bn -> tanh -> FC (fp).
+    """
+    x = images.astype(ctx.compute_dtype)
+    x = ctx.conv(params["first_conv"], x, "first_conv", padding="VALID")
+    x = jnp.tanh(x)
+    x = _pool(x)
+    x = _bn(params["bn1"], x)
+    x = ctx.conv(params["conv2"], x, "conv2", padding="VALID")
+    x = _bn(params["bn2"], x)
+    x = _pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = ctx.dense(params["fc1"], x, "fc1")
+    x = _bn(params["bn3"], x[:, None, None, :])[:, 0, 0, :]
+    x = jnp.tanh(x)
+    return ctx.dense(params["head"], x, "head").astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# ResNet-18 (Table 1 CIFAR-10 / Table 2 ImageNet)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNet18Config:
+    name: str = "resnet18"
+    n_classes: int = 10
+    widths: tuple[int, ...] = (64, 128, 256, 512)
+    in_hw: int = 32
+    in_c: int = 3
+    stem_stride: int = 1  # 1 for CIFAR, 2 (+maxpool) for ImageNet
+
+
+def resnet18_init(key, cfg: ResNet18Config) -> Params:
+    ks = iter(jax.random.split(key, 64))
+    p: Params = {
+        "first_conv": qlayers.conv_init(next(ks), 3, 3, cfg.in_c, cfg.widths[0]),
+        "bn0": _bn_init(cfg.widths[0]),
+    }
+    c_in = cfg.widths[0]
+    for si, c_out in enumerate(cfg.widths):
+        stage: Params = {}
+        for bi in range(2):  # ResNet-18: two units per stage
+            stride = 2 if (bi == 0 and si > 0) else 1
+            unit: Params = {
+                "bn1": _bn_init(c_in),
+                "conv1": qlayers.conv_init(next(ks), 3, 3, c_in, c_out),
+                "bn2": _bn_init(c_out),
+                "conv2": qlayers.conv_init(next(ks), 3, 3, c_out, c_out),
+            }
+            if stride != 1 or c_in != c_out:
+                unit["proj"] = qlayers.conv_init(next(ks), 1, 1, c_in, c_out)
+            stage[f"unit{bi}"] = unit
+            c_in = c_out
+        p[f"stage{si + 1}"] = stage
+    p["bn_final"] = _bn_init(c_in)
+    p["head"] = qlayers.dense_init(next(ks), c_in, cfg.n_classes)
+    return p
+
+
+def _res_unit(unit, x, stride, ctx: QCtx, path: str):
+    h = _bn(unit["bn1"], x)
+    h = ctx.conv(unit["conv1"], h, f"{path}/conv1", stride=stride, padding="SAME")
+    h = _bn(unit["bn2"], h)
+    h = ctx.conv(unit["conv2"], h, f"{path}/conv2", stride=1, padding="SAME")
+    if "proj" in unit:
+        x = ctx.conv(unit["proj"], x, f"{path}/proj", stride=stride,
+                     padding="SAME")
+    return x + h
+
+
+def resnet18_forward(params, cfg: ResNet18Config, ctx: QCtx, images):
+    x = images.astype(ctx.compute_dtype)
+    x = ctx.conv(params["first_conv"], x, "first_conv",
+                 stride=cfg.stem_stride, padding="SAME")
+    x = _bn(params["bn0"], x)
+    x = jax.nn.relu(x)
+    for si in range(4):
+        stage = params[f"stage{si + 1}"]
+        for bi in range(2):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            x = _res_unit(stage[f"unit{bi}"], x, stride, ctx,
+                          f"stage{si + 1}/unit{bi}")
+    x = _bn(params["bn_final"], x)
+    x = jax.nn.relu(x)
+    x = x.mean(axis=(1, 2))
+    return ctx.dense(params["head"], x, "head").astype(jnp.float32)

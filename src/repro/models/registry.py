@@ -1,0 +1,48 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher,
+test and benchmark."""
+
+from __future__ import annotations
+
+from repro.configs import (
+    deepseek_7b,
+    deepseek_moe_16b,
+    gemma2_27b,
+    granite_3_2b,
+    internvl2_1b,
+    lenet_mnist,
+    qwen2_72b,
+    qwen2_moe_a27b,
+    recurrentgemma_2b,
+    resnet18_cifar10,
+    rwkv6_7b,
+    whisper_base,
+)
+from repro.configs.common import ArchSpec
+
+_MODULES = (
+    recurrentgemma_2b,
+    rwkv6_7b,
+    deepseek_7b,
+    granite_3_2b,
+    qwen2_72b,
+    gemma2_27b,
+    deepseek_moe_16b,
+    qwen2_moe_a27b,
+    internvl2_1b,
+    whisper_base,
+    lenet_mnist,
+    resnet18_cifar10,
+)
+
+ARCHS: dict[str, ArchSpec] = {m.SPEC.arch_id: m.SPEC for m in _MODULES}
+
+# the ten assigned LM-family architectures (the CNNs are paper-fidelity extras)
+ASSIGNED = tuple(
+    a for a in ARCHS if ARCHS[a].family in ("lm", "whisper")
+)
+
+
+def get(arch_id: str) -> ArchSpec:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]

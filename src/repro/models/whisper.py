@@ -1,0 +1,224 @@
+"""Whisper-base backbone (enc-dec transformer).
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, T_enc, d_model) and the encoder runs plain
+bidirectional attention over them.  T_enc is whisper-native 1500; the
+assigned seq_len applies to the decoder.  LayerNorm + GELU + learned
+positions + tied embedding head, per the paper (arXiv:2212.04356).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn_lib
+from repro.nn import mlp as mlp_lib
+from repro.nn.common import QCtx, embed_init, norm_apply, norm_init, sincos_positions
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class WhisperConfig:
+    name: str
+    n_layers: int  # per stack
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab_size: int
+    t_enc: int = 1500
+    max_dec: int = 448  # grown by configs for the assigned shapes
+
+    @property
+    def self_attn(self) -> attn_lib.AttnConfig:
+        return attn_lib.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_heads, d_head=self.d_model // self.n_heads,
+            use_rope=False, causal=True, full_attn_max_seq=4096,
+        )
+
+    @property
+    def enc_attn(self) -> attn_lib.AttnConfig:
+        return dataclasses.replace(self.self_attn, causal=False)
+
+    @property
+    def cross_attn(self) -> attn_lib.AttnConfig:
+        return dataclasses.replace(self.self_attn, causal=False)
+
+    @property
+    def mlp(self) -> mlp_lib.MLPConfig:
+        return mlp_lib.MLPConfig(self.d_model, self.d_ff, act="gelu", gated=False)
+
+
+def init(key: jax.Array, cfg: WhisperConfig, dtype=jnp.float32) -> Params:
+    n = cfg.n_layers
+    keys = jax.random.split(key, 2 * n + 2)
+    enc_layers, dec_layers = [], []
+    for i in range(n):
+        ke1, ke2 = jax.random.split(keys[i])
+        enc_layers.append({
+            "ln1": norm_init("layernorm", cfg.d_model),
+            "attn": attn_lib.attn_init(ke1, cfg.enc_attn, dtype=dtype),
+            "ln2": norm_init("layernorm", cfg.d_model),
+            "mlp": mlp_lib.mlp_init(ke2, cfg.mlp, dtype=dtype),
+        })
+        kd1, kd2, kd3 = jax.random.split(keys[n + i], 3)
+        dec_layers.append({
+            "ln1": norm_init("layernorm", cfg.d_model),
+            "attn": attn_lib.attn_init(kd1, cfg.self_attn, dtype=dtype),
+            "ln_x": norm_init("layernorm", cfg.d_model),
+            "xattn": attn_lib.attn_init(kd2, cfg.cross_attn, dtype=dtype),
+            "ln2": norm_init("layernorm", cfg.d_model),
+            "mlp": mlp_lib.mlp_init(kd3, cfg.mlp, dtype=dtype),
+        })
+    return {
+        "embed": embed_init(keys[-2], cfg.vocab_size, cfg.d_model, dtype),
+        "pos_dec": jax.random.normal(keys[-1], (cfg.max_dec, cfg.d_model),
+                                     dtype) * 0.01,
+        "encoder": {"layers": enc_layers,
+                    "ln_post": norm_init("layernorm", cfg.d_model)},
+        "decoder": {"layers": dec_layers,
+                    "ln_post": norm_init("layernorm", cfg.d_model)},
+    }
+
+
+def encode(params, cfg: WhisperConfig, ctx: QCtx, frames: jax.Array) -> jax.Array:
+    """frames: (B, T_enc, d_model) stub embeddings -> encoder output."""
+    b, t, _ = frames.shape
+    pos_tab = sincos_positions(t, cfg.d_model).astype(ctx.compute_dtype)
+    x = frames.astype(ctx.compute_dtype) + pos_tab[None]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    for i, blk in enumerate(params["encoder"]["layers"]):
+        path = f"encoder/layers/{i}"
+        h = norm_apply("layernorm", blk["ln1"], x)
+        x = x + attn_lib.attn_forward(blk["attn"], h, positions, cfg.enc_attn,
+                                      ctx, f"{path}/attn")
+        h = norm_apply("layernorm", blk["ln2"], x)
+        x = x + mlp_lib.mlp_apply(blk["mlp"], h, cfg.mlp, ctx, f"{path}/mlp")
+    return norm_apply("layernorm", params["encoder"]["ln_post"], x)
+
+
+def forward(
+    params, cfg: WhisperConfig, ctx: QCtx,
+    frames: jax.Array,  # (B, T_enc, d_model) — stub frontend output
+    tokens: jax.Array,  # (B, S_dec)
+) -> tuple[jax.Array, jax.Array]:
+    """Teacher-forced training forward.  Returns (logits, aux=0)."""
+    enc = encode(params, cfg, ctx, frames)
+    b, t_enc, _ = enc.shape
+    enc_pos = jnp.broadcast_to(jnp.arange(t_enc, dtype=jnp.int32), (b, t_enc))
+
+    b, s = tokens.shape
+    x = params["embed"]["table"].astype(ctx.compute_dtype)[tokens]
+    x = x + params["pos_dec"][:s].astype(ctx.compute_dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    for i, blk in enumerate(params["decoder"]["layers"]):
+        path = f"decoder/layers/{i}"
+        h = norm_apply("layernorm", blk["ln1"], x)
+        x = x + attn_lib.attn_forward(blk["attn"], h, positions, cfg.self_attn,
+                                      ctx, f"{path}/attn")
+        h = norm_apply("layernorm", blk["ln_x"], x)
+        kv = attn_lib.cross_kv(blk["xattn"], enc, cfg.cross_attn, ctx,
+                               f"{path}/xattn")
+        x = x + attn_lib.attn_forward(blk["xattn"], h, positions,
+                                      cfg.cross_attn, ctx, f"{path}/xattn",
+                                      kv=kv, kv_positions=enc_pos)
+        h = norm_apply("layernorm", blk["ln2"], x)
+        x = x + mlp_lib.mlp_apply(blk["mlp"], h, cfg.mlp, ctx, f"{path}/mlp")
+
+    x = norm_apply("layernorm", params["decoder"]["ln_post"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"].astype(x.dtype))
+    return logits.astype(jnp.float32), jnp.zeros((), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: WhisperConfig, b: int, cache_len: int, dtype=jnp.bfloat16):
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "self": attn_lib.cache_init(b, cfg.self_attn, cache_len, dtype),
+            "cross": attn_lib.cache_init(b, cfg.cross_attn, cfg.t_enc, dtype),
+        })
+    return {"layers": layers}
+
+
+def prefill(params, cfg: WhisperConfig, ctx: QCtx, frames, tokens, cache_len):
+    """Encode audio, prefill decoder self-cache + static cross-cache."""
+    enc = encode(params, cfg, ctx, frames)
+    b, t_enc, _ = enc.shape
+    enc_pos = jnp.broadcast_to(jnp.arange(t_enc, dtype=jnp.int32), (b, t_enc))
+    cache = init_cache(cfg, b, cache_len, ctx.compute_dtype)
+
+    s = tokens.shape[1]
+    x = params["embed"]["table"].astype(ctx.compute_dtype)[tokens]
+    x = x + params["pos_dec"][:s].astype(ctx.compute_dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    for i, blk in enumerate(params["decoder"]["layers"]):
+        path = f"decoder/layers/{i}"
+        lc = cache["layers"][i]
+        h = norm_apply("layernorm", blk["ln1"], x)
+        q, k, v = attn_lib._project_qkv(blk["attn"], h, positions,
+                                        cfg.self_attn, ctx, f"{path}/attn")
+        lc["self"] = attn_lib.cache_fill(lc["self"], k, v, positions)
+        qg = q.reshape(b, s, cfg.n_heads, 1, cfg.self_attn.d_head)
+        if s <= cfg.self_attn.full_attn_max_seq:
+            out = attn_lib._sdpa(cfg.self_attn, qg, k, v,
+                                 attn_lib._mask(cfg.self_attn, positions, positions))
+        else:
+            out = attn_lib._sdpa_chunked(cfg.self_attn, qg, k, v, positions,
+                                         positions)
+        out = out.reshape(b, s, cfg.d_model).astype(ctx.compute_dtype)
+        x = x + ctx.dense(blk["attn"]["o"], out, f"{path}/attn/o")
+
+        h = norm_apply("layernorm", blk["ln_x"], x)
+        kx, vx = attn_lib.cross_kv(blk["xattn"], enc, cfg.cross_attn, ctx,
+                                   f"{path}/xattn")
+        lc["cross"] = attn_lib.cache_fill(lc["cross"], kx, vx, enc_pos)
+        x = x + attn_lib.attn_forward(blk["xattn"], h, positions,
+                                      cfg.cross_attn, ctx, f"{path}/xattn",
+                                      kv=(kx, vx), kv_positions=enc_pos)
+        h = norm_apply("layernorm", blk["ln2"], x)
+        x = x + mlp_lib.mlp_apply(blk["mlp"], h, cfg.mlp, ctx, f"{path}/mlp")
+
+    x = norm_apply("layernorm", params["decoder"]["ln_post"], x[:, -1:, :])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"].astype(x.dtype))
+    return logits.astype(jnp.float32), cache
+
+
+def decode_step(params, cfg: WhisperConfig, ctx: QCtx, cache, tokens, pos):
+    """tokens: (B, 1); pos: (B,) decoder position."""
+    b = tokens.shape[0]
+    x = params["embed"]["table"].astype(ctx.compute_dtype)[tokens]
+    x = x + params["pos_dec"].astype(ctx.compute_dtype)[pos][:, None]
+
+    new_layers = []
+    for i, blk in enumerate(params["decoder"]["layers"]):
+        path = f"decoder/layers/{i}"
+        lc = dict(cache["layers"][i])
+        h = norm_apply("layernorm", blk["ln1"], x)
+        h, sc = attn_lib.attn_decode(blk["attn"], h, pos, lc["self"],
+                                     cfg.self_attn, ctx, f"{path}/attn")
+        lc["self"] = sc
+        x = x + h
+        h = norm_apply("layernorm", blk["ln_x"], x)
+        h, _ = attn_lib.attn_decode(blk["xattn"], h, pos, lc["cross"],
+                                    cfg.cross_attn, ctx, f"{path}/xattn",
+                                    cross=True)
+        x = x + h
+        h = norm_apply("layernorm", blk["ln2"], x)
+        x = x + mlp_lib.mlp_apply(blk["mlp"], h, cfg.mlp, ctx, f"{path}/mlp")
+        new_layers.append(lc)
+
+    x = norm_apply("layernorm", params["decoder"]["ln_post"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"].astype(x.dtype))
+    return logits.astype(jnp.float32), {"layers": new_layers}

@@ -1,0 +1,167 @@
+"""Shared NN building blocks: norms, RoPE, activations, the QCtx handle.
+
+Every internal GEMM in every model goes through ``QCtx.dense`` so the
+BMXNet quantization policy (core/policy.py) applies uniformly across the
+whole architecture pool.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlayers
+from repro.core.policy import QuantPolicy
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class QCtx:
+    """Carries the quantization policy + compute dtype through a model.
+
+    ``mesh`` (optional): the physical mesh, enabling shard_map-based layers
+    (MoE expert parallelism).  None on single-device runs -> pure-jnp paths.
+    """
+
+    policy: QuantPolicy
+    compute_dtype: Any = jnp.bfloat16
+    xnor_backend: str = "vpu"
+    mesh: Any = None
+
+    def dense(self, params: Params, x: jax.Array, path: str) -> jax.Array:
+        return qlayers.qdense(
+            params,
+            x,
+            self.policy.spec(path),
+            compute_dtype=self.compute_dtype,
+            xnor_backend=self.xnor_backend,
+        )
+
+    def conv(self, params: Params, x: jax.Array, path: str, **kw) -> jax.Array:
+        return qlayers.qconv(
+            params,
+            x,
+            self.policy.spec(path),
+            compute_dtype=self.compute_dtype,
+            xnor_backend=self.xnor_backend,
+            **kw,
+        )
+
+
+def fp_ctx(compute_dtype=jnp.bfloat16) -> QCtx:
+    return QCtx(policy=QuantPolicy.full_precision(), compute_dtype=compute_dtype)
+
+
+def shard_heads(x: jax.Array, ctx: QCtx) -> jax.Array:
+    """Constrain (B, S, H, Dh) to head-sharding over 'model' when possible.
+
+    Used to pin *derived* per-head tensors (e.g. RWKV's data-dependent
+    decay, which flows from replicated LoRA weights) to the layout of the
+    projected r/k/v — otherwise GSPMD resolves the mixed-layout einsums by
+    all-gathering the projections (measured 192 GiB/step on rwkv6-7b
+    prefill_32k)."""
+    mesh = ctx.mesh
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    sizes = dict(mesh.shape)
+    if x.ndim != 4 or x.shape[2] % sizes["model"]:
+        return x
+    import math
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if dp and x.shape[0] % math.prod(sizes[a] for a in dp):
+        dp = ()
+    spec = P(dp if dp else None, None, "model", None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+def norm_init(kind: str, d: int) -> Params:
+    return rmsnorm_init(d) if kind == "rmsnorm" else layernorm_init(d)
+
+
+def norm_apply(kind: str, params: Params, x: jax.Array) -> jax.Array:
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (B, S, H, Dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), dtype)}
+
+
+def embed_lookup(params: Params, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return params["table"].astype(compute_dtype)[tokens]
+
+
+def sincos_positions(seq: int, d: int, max_ts: float = 10000.0) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (seq, d)."""
+    half = d // 2
+    freq = jnp.exp(-jnp.log(max_ts) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(seq)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

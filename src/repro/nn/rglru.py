@@ -1,0 +1,144 @@
+"""Griffin/RecurrentGemma recurrent block: Conv1D(4) + RG-LRU.
+
+The RG-LRU is a *diagonal* gated linear recurrence:
+
+    r_t = sigmoid(BD_a(u_t));   i_t = sigmoid(BD_x(u_t))
+    log a_t = -c * softplus(L) * r_t                 (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Being elementwise it maps to ``lax.associative_scan`` (log-depth) for
+training/prefill and an O(1) state update for decode — which is why
+recurrentgemma runs the ``long_500k`` cell that full-attention archs skip.
+
+The gate projections are block-diagonal (as in the official model) and stay
+full precision (they are small and act as gates — the paper's rule of
+keeping non-GEMM auxiliaries fp); the block in/out projections ARE plain
+GEMMs and go through QCtx.dense like everything else.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlayers
+from repro.nn.common import QCtx
+
+Params = dict[str, Any]
+
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int
+    n_blocks: int  # block-diagonal gate blocks (= n_heads in the 2b model)
+    conv_width: int = 4
+
+
+def _bd_init(key, d: int, n_blocks: int, dtype=jnp.float32) -> Params:
+    bs = d // n_blocks
+    return {
+        "w": jax.random.normal(key, (n_blocks, bs, bs), dtype) * bs**-0.5,
+        "b": jnp.zeros((d,), dtype),
+    }
+
+
+def _bd_apply(p: Params, x: jax.Array) -> jax.Array:
+    """Block-diagonal linear: x (..., D) with D = n_blocks * bs."""
+    nb, bs, _ = p["w"].shape
+    xb = x.reshape(*x.shape[:-1], nb, bs)
+    y = jnp.einsum("...nb,nbc->...nc", xb, p["w"].astype(x.dtype))
+    return y.reshape(*x.shape) + p["b"].astype(x.dtype)
+
+
+def rglru_init(key, cfg: RGLRUConfig, *, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": qlayers.dense_init(ks[0], cfg.d_model, cfg.d_rnn, dtype=dtype),
+        "in_y": qlayers.dense_init(ks[1], cfg.d_model, cfg.d_rnn, dtype=dtype),
+        "conv": {
+            "w": jax.random.normal(ks[2], (cfg.conv_width, cfg.d_rnn), dtype)
+            * cfg.conv_width**-0.5,
+            "b": jnp.zeros((cfg.d_rnn,), dtype),
+        },
+        "gate_a": _bd_init(ks[3], cfg.d_rnn, cfg.n_blocks, dtype),
+        "gate_x": _bd_init(ks[4], cfg.d_rnn, cfg.n_blocks, dtype),
+        # Lambda parametrised so a ~ U(0.9, 0.999) at init (Griffin A.2)
+        "lam": jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, cfg.d_rnn)) / _C)).astype(dtype),
+        "out": qlayers.dense_init(ks[5], cfg.d_rnn, cfg.d_model, dtype=dtype),
+    }
+
+
+def _gates(params, u):
+    r = jax.nn.sigmoid(_bd_apply(params["gate_a"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(_bd_apply(params["gate_x"], u).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * u.astype(jnp.float32)
+    )
+    return a, gated_in
+
+
+def _conv_train(params, x):
+    """Causal depthwise temporal conv, width W: y_t = sum_j w_j x_{t-W+1+j}."""
+    w = params["conv"]["w"].astype(x.dtype)  # (W, D)
+    width = w.shape[0]
+    acc = jnp.zeros_like(x)
+    for j in range(width):
+        shift = width - 1 - j
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1], :]
+        acc = acc + xs * w[j]
+    return acc + params["conv"]["b"].astype(x.dtype)
+
+
+def rglru_forward(
+    params: Params, x: jax.Array, cfg: RGLRUConfig, ctx: QCtx, path: str
+) -> jax.Array:
+    """Training / prefill forward over a full sequence (B, S, D)."""
+    y_gate = jax.nn.gelu(ctx.dense(params["in_y"], x, f"{path}/in_y"))
+    u = ctx.dense(params["in_x"], x, f"{path}/in_x")
+    u = _conv_train(params, u)
+    a, b = _gates(params, u)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (h.astype(ctx.compute_dtype)) * y_gate
+    return ctx.dense(params["out"], out, f"{path}/out")
+
+
+def rglru_cache_init(b: int, cfg: RGLRUConfig, dtype=jnp.float32) -> Params:
+    return {
+        "h": jnp.zeros((b, cfg.d_rnn), dtype),
+        "conv": jnp.zeros((b, cfg.conv_width - 1, cfg.d_rnn), dtype),
+    }
+
+
+def rglru_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, D)
+    cache: Params,
+    cfg: RGLRUConfig,
+    ctx: QCtx,
+    path: str,
+) -> tuple[jax.Array, Params]:
+    y_gate = jax.nn.gelu(ctx.dense(params["in_y"], x, f"{path}/in_y"))
+    u = ctx.dense(params["in_x"], x, f"{path}/in_x")[:, 0]  # (B, Dr)
+    w = params["conv"]["w"].astype(u.dtype)
+    hist = jnp.concatenate([cache["conv"].astype(u.dtype), u[:, None]], axis=1)
+    u_c = jnp.einsum("bwd,wd->bd", hist, w) + params["conv"]["b"].astype(u.dtype)
+    a, bterm = _gates(params, u_c[:, None])
+    h = a[:, 0] * cache["h"] + bterm[:, 0]
+    out = (h[:, None].astype(ctx.compute_dtype)) * y_gate
+    y = ctx.dense(params["out"], out, f"{path}/out")
+    new_cache = {"h": h, "conv": hist[:, 1:].astype(cache["conv"].dtype)}
+    return y, new_cache

@@ -1,0 +1,284 @@
+"""RWKV-6 "Finch" — attention-free token mixing with data-dependent decay.
+
+Time-mix (WKV6): per head of size ``dh`` the recurrence over a (dh_k, dh_v)
+state S is
+
+    y_t = S_{t-1}^T r_t + (r_t · (u ⊙ k_t)) v_t
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ,     w_t = exp(-exp(ŵ_t)) ∈ (0,1)
+
+with ŵ_t data-dependent (token-shift + LoRA).  We evaluate it **chunked**:
+inside a chunk of C tokens the pairwise decay ratios
+
+    A_{t-1}/A_s = exp(la_excl[t] - la_incl[s])   (s < t)
+
+have non-positive exponents (la is a running sum of negative log-decays), so
+the intra-chunk quadratic form is computed *exactly* in log space with every
+exponent bounded above by 0 — no overflow, no rescaling pass.  The chunk
+state is carried by ``lax.scan``; decode is the O(1) recurrence.  This is
+the TPU-friendly replacement for the sequential CUDA wkv kernel (see
+DESIGN.md — chunk quadratics vectorise on the VPU; a Pallas fusion of the
+chunk body is a §Perf candidate).
+
+All large projections (r/k/v/g/o, channel-mix) go through QCtx.dense and
+quantize under the BMXNet policy; LoRA pieces, decays and norms stay fp.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlayers
+from repro.nn.common import QCtx
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    n_heads: int
+    d_head: int
+    d_ff: int
+    chunk: int = 16
+    lora_mix: int = 32
+    lora_decay: int = 64
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def timemix_init(key, cfg: RWKV6Config, *, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    std = d**-0.5
+    return {
+        "mu": jax.random.uniform(ks[0], (6, d), dtype),  # x,w,k,v,r,g
+        "mix_w1": jax.random.normal(ks[1], (d, 5 * cfg.lora_mix), dtype) * std,
+        "mix_w2": jax.random.normal(ks[2], (5, cfg.lora_mix, d), dtype)
+        * cfg.lora_mix**-0.5,
+        "decay_w0": jnp.full((d,), -6.0, dtype),
+        "decay_w1": jax.random.normal(ks[3], (d, cfg.lora_decay), dtype) * std,
+        "decay_w2": jax.random.normal(ks[4], (cfg.lora_decay, d), dtype)
+        * cfg.lora_decay**-0.5,
+        "bonus_u": jax.random.normal(ks[5], (cfg.n_heads, cfg.d_head), dtype) * 0.1,
+        "r": qlayers.dense_init(ks[6], d, d, dtype=dtype),
+        "k": qlayers.dense_init(ks[7], d, d, dtype=dtype),
+        "v": qlayers.dense_init(ks[8], d, d, dtype=dtype),
+        "g": qlayers.dense_init(ks[9], d, d, dtype=dtype),
+        "o": qlayers.dense_init(ks[10], d, d, dtype=dtype),
+        "gn": {
+            "scale": jnp.ones((d,), dtype),
+            "bias": jnp.zeros((d,), dtype),
+        },
+    }
+
+
+def chanmix_init(key, cfg: RWKV6Config, *, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": jax.random.uniform(ks[0], (2, cfg.d_model), dtype),  # k, r
+        "k": qlayers.dense_init(ks[1], cfg.d_model, cfg.d_ff, dtype=dtype),
+        "v": qlayers.dense_init(ks[2], cfg.d_ff, cfg.d_model, dtype=dtype),
+        "r": qlayers.dense_init(jax.random.fold_in(key, 3), cfg.d_model,
+                                cfg.d_model, dtype=dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# token shift
+# --------------------------------------------------------------------------
+
+
+def _shift_train(x: jax.Array) -> jax.Array:
+    """prev-token shift along S; position 0 sees zeros."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+
+
+# --------------------------------------------------------------------------
+# WKV6 core
+# --------------------------------------------------------------------------
+
+
+def _wkv_chunked(r, k, v, lw, u, s0, chunk: int, ctx=None):
+    """r,k,v,lw: (B, S, H, dh) fp32; u: (H, dh); s0: (B, H, dh, dh).
+
+    Returns (y (B,S,H,dh), s_final).  All exp() arguments are <= 0.
+    """
+    b, s, h, dh = r.shape
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    n = s // c
+
+    def _pin(x):
+        """Keep chunk tensors head-sharded inside the scan body — sharding
+        does not propagate into while-loop operands, and unconstrained
+        bodies made GSPMD replicate every projection output (measured
+        192 x 1 GiB all-gathers on prefill_32k)."""
+        if ctx is None:
+            return x
+        from repro.nn.common import shard_heads
+        return shard_heads(x, ctx)
+
+    def per_chunk(s_prev, inp):
+        rc, kc, vc, lwc = inp  # (B, C, H, dh)
+        rc, kc, vc, lwc = _pin(rc), _pin(kc), _pin(vc), _pin(lwc)
+        la_incl = jnp.cumsum(lwc, axis=1)  # (B, C, H, dh), decreasing
+        la_excl = la_incl - lwc
+        # intra-chunk pairwise decay: exponent la_excl[t] - la_incl[s] <= 0
+        # for s < t (cumsum of negatives); masked elsewhere.
+        pair = la_excl[:, :, None] - la_incl[:, None, :]  # (B, C, C, H, dh)
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)[None, :, :, None, None]
+        decay = jnp.exp(jnp.where(tri, pair, -jnp.inf))
+        scores = jnp.einsum("bthc,bshc,btshc->btsh", rc, kc, decay)
+        y_intra = jnp.einsum("btsh,bshc->bthc", scores, vc)
+        # diagonal bonus term
+        diag = jnp.einsum("bthc,hc,bthc->bth", rc, u, kc)
+        y_intra = y_intra + diag[..., None] * vc
+        # inter-chunk: state contribution
+        rp = rc * jnp.exp(la_excl)
+        y_inter = jnp.einsum("bthk,bhkv->bthv", rp, s_prev)
+        # state update: exponents la_total - la_incl[s] <= 0
+        la_tot = la_incl[:, -1]  # (B, H, dh)
+        kd = kc * jnp.exp(la_tot[:, None] - la_incl)
+        s_new = jnp.exp(la_tot)[..., None] * s_prev + jnp.einsum(
+            "bshk,bshv->bhkv", kd, vc
+        )
+        return s_new, y_intra + y_inter
+
+    def _pin5(x):
+        """Constrain the stacked (n, B, C, H, dh) scan operands — GSPMD
+        otherwise replicates while-loop xs and all-gathers every projection
+        output feeding them."""
+        if ctx is None or getattr(ctx, "mesh", None) is None:
+            return x
+        mesh = ctx.mesh
+        if "model" not in mesh.axis_names or h % dict(mesh.shape)["model"]:
+            return x
+        import math
+
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        if dp and b % math.prod(dict(mesh.shape)[a] for a in dp):
+            dp = ()
+        spec = P(None, dp if dp else None, None, "model", None)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    rs = _pin5(r.reshape(b, n, c, h, dh).transpose(1, 0, 2, 3, 4))
+    ks_ = _pin5(k.reshape(b, n, c, h, dh).transpose(1, 0, 2, 3, 4))
+    vs = _pin5(v.reshape(b, n, c, h, dh).transpose(1, 0, 2, 3, 4))
+    lws = _pin5(lw.reshape(b, n, c, h, dh).transpose(1, 0, 2, 3, 4))
+    s_fin, ys = jax.lax.scan(per_chunk, s0, (rs, ks_, vs, lws))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+    return y, s_fin
+
+
+def _wkv_step(r, k, v, lw, u, s_prev):
+    """Single decode step.  r,k,v,lw: (B, H, dh)."""
+    w = jnp.exp(lw)
+    y = jnp.einsum("bhk,bhkv->bhv", r, s_prev) + jnp.einsum(
+        "bhc,hc,bhc->bh", r, u, k
+    )[..., None] * v
+    s_new = w[..., None] * s_prev + jnp.einsum("bhk,bhv->bhkv", k, v)
+    return y, s_new
+
+
+# --------------------------------------------------------------------------
+# time-mix block
+# --------------------------------------------------------------------------
+
+
+def _ddlerp(p: Params, x, xx):
+    """Data-dependent token-shift interpolation -> xw, xk, xv, xr, xg."""
+    mu = p["mu"].astype(x.dtype)
+    xxx = x + xx * mu[0]
+    hid = jnp.tanh(xxx @ p["mix_w1"].astype(x.dtype))
+    hid = hid.reshape(*hid.shape[:-1], 5, p["mix_w2"].shape[1])
+    dyn = jnp.einsum("...nk,nkd->...nd", hid, p["mix_w2"].astype(x.dtype))
+    outs = []
+    for i in range(5):  # w, k, v, r, g
+        outs.append(x + xx * (mu[i + 1] + dyn[..., i, :]))
+    return outs
+
+
+def _heads(x, h, dh):
+    return x.reshape(*x.shape[:-1], h, dh).astype(jnp.float32)
+
+
+def _group_norm(p, y, h, dh, eps=64e-5):
+    """Per-head layernorm (RWKV's GroupNorm(H))."""
+    mu = y.mean(-1, keepdims=True)
+    var = ((y - mu) ** 2).mean(-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + eps)
+    yn = yn.reshape(*y.shape[:-2], h * dh)
+    return yn * p["scale"].astype(yn.dtype) + p["bias"].astype(yn.dtype)
+
+
+def _timemix_pre(params, x, xx, cfg: RWKV6Config, ctx: QCtx, path: str):
+    xw, xk, xv, xr, xg = _ddlerp(params, x, xx)
+    h, dh = cfg.n_heads, cfg.d_head
+    r = _heads(ctx.dense(params["r"], xr, f"{path}/r"), h, dh)
+    k = _heads(ctx.dense(params["k"], xk, f"{path}/k"), h, dh)
+    v = _heads(ctx.dense(params["v"], xv, f"{path}/v"), h, dh)
+    g = jax.nn.silu(ctx.dense(params["g"], xg, f"{path}/g"))
+    dec = params["decay_w0"].astype(jnp.float32) + (
+        jnp.tanh(xw.astype(jnp.float32) @ params["decay_w1"].astype(jnp.float32))
+        @ params["decay_w2"].astype(jnp.float32)
+    )
+    lw = -jnp.exp(dec)  # log decay, strictly negative
+    lw = _heads(lw, h, dh)
+    # pin the decay to r/k/v's head-sharding — it flows from replicated
+    # LoRA weights and otherwise drags the WKV einsums to replicated layout
+    from repro.nn.common import shard_heads
+    lw = shard_heads(lw, ctx)
+    return r, k, v, lw, g
+
+
+def timemix_forward(params, x, cfg: RWKV6Config, ctx: QCtx, path: str):
+    xx = _shift_train(x) - x
+    r, k, v, lw, g = _timemix_pre(params, x, xx, cfg, ctx, path)
+    u = params["bonus_u"].astype(jnp.float32)
+    b = x.shape[0]
+    s0 = jnp.zeros((b, cfg.n_heads, cfg.d_head, cfg.d_head), jnp.float32)
+    y, _ = _wkv_chunked(r, k, v, lw, u, s0, cfg.chunk, ctx)
+    y = _group_norm(params["gn"], y, cfg.n_heads, cfg.d_head)
+    y = (y.astype(ctx.compute_dtype)) * g
+    return ctx.dense(params["o"], y, f"{path}/o")
+
+
+def timemix_decode(params, x, cache, cfg: RWKV6Config, ctx: QCtx, path: str):
+    """x: (B, 1, D); cache: {'S': (B,H,dh,dh), 'shift': (B,D)}."""
+    xx = cache["shift"][:, None].astype(x.dtype) - x
+    r, k, v, lw, g = _timemix_pre(params, x, xx, cfg, ctx, path)
+    u = params["bonus_u"].astype(jnp.float32)
+    y, s_new = _wkv_step(r[:, 0], k[:, 0], v[:, 0], lw[:, 0], u, cache["S"])
+    y = _group_norm(params["gn"], y[:, None], cfg.n_heads, cfg.d_head)
+    y = (y.astype(ctx.compute_dtype)) * g
+    out = ctx.dense(params["o"], y, f"{path}/o")
+    return out, {"S": s_new, "shift": x[:, 0].astype(cache["shift"].dtype)}
+
+
+# --------------------------------------------------------------------------
+# channel-mix block
+# --------------------------------------------------------------------------
+
+
+def chanmix_forward(params, x, cfg: RWKV6Config, ctx: QCtx, path: str,
+                    shift_state=None):
+    if shift_state is None:
+        xx = _shift_train(x) - x
+    else:
+        xx = shift_state[:, None].astype(x.dtype) - x
+    mu = params["mu"].astype(x.dtype)
+    xk = x + xx * mu[0]
+    xr = x + xx * mu[1]
+    rgate = jax.nn.sigmoid(ctx.dense(params["r"], xr, f"{path}/r"))
+    kk = ctx.dense(params["k"], xk, f"{path}/k")
+    kk = jnp.square(jax.nn.relu(kk))
+    return rgate * ctx.dense(params["v"], kk, f"{path}/v")

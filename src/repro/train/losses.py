@@ -1,0 +1,48 @@
+"""Per-family training losses."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+AUX_WEIGHT = 0.01  # MoE load-balance aux coefficient
+IGNORE = -1
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean CE over positions where target != IGNORE.  logits (B,S,V) fp32."""
+    v = logits.shape[-1]
+    mask = (targets != IGNORE).astype(jnp.float32)
+    safe_t = jnp.maximum(targets, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe_t[..., None], axis=-1)[..., 0]
+    ce = (logz - gold) * mask
+    return ce.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def lm_loss(model_forward, params, cfg, ctx, batch, remat=False,
+            scan_blocks=False, seq_parallel=False):
+    """batch: tokens (B,S), targets (B,S) [+ vision_embeds].  For VLM the
+    vision prefix positions get IGNORE targets."""
+    vis = batch.get("vision_embeds")
+    logits, aux = model_forward(params, cfg, ctx, batch["tokens"], vis,
+                                remat=remat, scan_blocks=scan_blocks,
+                                seq_parallel=seq_parallel)
+    targets = batch["targets"]
+    if cfg.vision_prefix:
+        pad = jnp.full(
+            (targets.shape[0], cfg.vision_prefix), IGNORE, targets.dtype
+        )
+        targets = jnp.concatenate([pad, targets], axis=1)
+    ce = cross_entropy(logits, targets)
+    loss = ce + AUX_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def whisper_loss(model_forward, params, cfg, ctx, batch, remat=False,
+                 scan_blocks=False, seq_parallel=False):
+    del scan_blocks, seq_parallel  # whisper-base: 6 layers, unrolled is fine
+    logits, aux = model_forward(params, cfg, ctx, batch["frames"],
+                                batch["tokens"])
+    ce = cross_entropy(logits, batch["targets"])
+    return ce, {"ce": ce, "aux": aux}

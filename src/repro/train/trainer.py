@@ -1,0 +1,148 @@
+"""Train-step factory: grad + clip + AdamW, with microbatch accumulation,
+remat, and optional 1-bit cross-pod gradient compression.
+
+``make_train_step(spec, ...)`` returns a pure function
+
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+
+suitable for ``jax.jit`` with in/out shardings from dist/sharding.py.  The
+same function lowers on 1 CPU device (smoke tests) and on the 256/512-chip
+production meshes (dry-run) — that symmetry is the whole point.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+import dataclasses
+
+from repro.configs.common import ArchSpec
+from repro.models import lm as lm_model
+from repro.models import whisper as whisper_model
+from repro.nn.common import QCtx
+from repro.optim import adamw
+from repro.train import losses
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainLayouts:
+    """ZeRO-1 layout pair (pytrees of NamedSharding).
+
+    ``compute``: TP-only (weights replicated across 'data') — what the
+    matmuls contract against.  ``master``: fp32 master params + moments
+    sharded over ('data' x 'model').  The step casts/constrains between
+    them: one bf16 all-gather (params) + one fp32 reduce-scatter (grads)
+    per step, instead of GSPMD resharding activations (DESIGN.md §5).
+    """
+
+    compute: object
+    master: object
+
+
+def _constrain(tree, shardings):
+    return jax.tree.map(jax.lax.with_sharding_constraint, tree, shardings)
+
+
+def _cast_floating(tree, dtype):
+    def c(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(c, tree)
+
+
+def loss_fn_for(spec: ArchSpec) -> Callable:
+    if spec.family == "lm":
+        return functools.partial(losses.lm_loss, lm_model.forward)
+    if spec.family == "whisper":
+        return functools.partial(losses.whisper_loss, whisper_model.forward)
+    raise ValueError(spec.family)
+
+
+def _split_micro(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B/n, ...) for scan-based accumulation."""
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(
+    spec: ArchSpec,
+    cfg: Any,
+    ctx: QCtx,
+    opt_cfg: adamw.AdamWConfig,
+    *,
+    remat: bool = True,
+    microbatch: int | None = None,
+    layouts: TrainLayouts | None = None,
+    scan_blocks: bool = False,
+    seq_parallel: bool = False,
+):
+    """ZeRO-1 step over (master fp32 params, opt state, batch)."""
+    loss_fn = loss_fn_for(spec)
+
+    def compute_loss(params, batch):
+        return loss_fn(params, cfg, ctx, batch, remat=remat,
+                       scan_blocks=scan_blocks, seq_parallel=seq_parallel)
+
+    grad_fn = jax.value_and_grad(compute_loss, has_aux=True)
+
+    def train_step(master, opt_state, batch):
+        # master (ZeRO-sharded fp32) -> compute layout (TP-only, bf16):
+        # GSPMD lowers the constraint to one bf16 all-gather over 'data'.
+        params = _cast_floating(master, ctx.compute_dtype)
+        if layouts is not None:
+            params = _constrain(params, layouts.compute)
+
+        if microbatch and microbatch > 1:
+            micro = _split_micro(batch, microbatch)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, _aux), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss_sum), _ = jax.lax.scan(acc, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = loss_sum / microbatch
+            aux = {}
+        else:
+            (loss, aux), grads = grad_fn(params, batch)
+
+        # grads -> master layout in fp32: one reduce-scatter over 'data'
+        grads = _cast_floating(grads, jnp.float32)
+        if layouts is not None:
+            grads = _constrain(grads, layouts.master)
+
+        master, opt_state, opt_metrics = adamw.update(
+            grads, opt_state, master, opt_cfg
+        )
+        metrics = {"loss": loss, **opt_metrics}
+        if isinstance(aux, dict):
+            metrics.update(aux)
+        return master, opt_state, metrics
+
+    return train_step
+
+
+def init_all(spec: ArchSpec, cfg: Any, key: jax.Array):
+    """(params, opt_state) init for any family."""
+    if spec.family == "lm":
+        params = lm_model.init(key, cfg)
+    elif spec.family == "whisper":
+        params = whisper_model.init(key, cfg)
+    else:
+        raise ValueError(spec.family)
+    return params, adamw.init(params)

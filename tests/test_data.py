@@ -1,0 +1,78 @@
+"""Synthetic data pipeline: determinism, host sharding, prefetch,
+learnability structure."""
+
+import numpy as np
+
+from repro.data import synthetic
+
+
+def test_batch_deterministic():
+    cfg = synthetic.DataConfig(vocab_size=97, seq_len=16, global_batch=4)
+    b1 = synthetic.batch_at(cfg, 5)
+    b2 = synthetic.batch_at(cfg, 5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["targets"], b2["targets"])
+
+
+def test_steps_differ():
+    cfg = synthetic.DataConfig(vocab_size=97, seq_len=16, global_batch=4)
+    assert not np.array_equal(synthetic.batch_at(cfg, 1)["tokens"],
+                              synthetic.batch_at(cfg, 2)["tokens"])
+
+
+def test_targets_are_shifted_tokens():
+    cfg = synthetic.DataConfig(vocab_size=97, seq_len=16, global_batch=4)
+    b = synthetic.batch_at(cfg, 0)
+    # targets[t] is the next token: tokens[t+1] == targets[t] for t < S-1
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+def test_host_sharding_disjoint():
+    c0 = synthetic.DataConfig(97, 16, 8, n_hosts=2, host_id=0)
+    c1 = synthetic.DataConfig(97, 16, 8, n_hosts=2, host_id=1)
+    b0 = synthetic.batch_at(c0, 3)
+    b1 = synthetic.batch_at(c1, 3)
+    assert b0["tokens"].shape == (4, 16)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_transition_structure_learnable():
+    """Most transitions follow ONE affine map (seed-fixed), so the mapping
+    is a function of the current token — the learnability property the
+    integration tests rely on."""
+    cfg = synthetic.DataConfig(vocab_size=211, seq_len=256, global_batch=8,
+                               noise=0.05)
+    b = synthetic.batch_at(cfg, 0)
+    x, y = b["tokens"][:, :-1].ravel(), b["tokens"][:, 1:].ravel()
+    # find the dominant (a, c): check all multipliers
+    best = 0
+    for a in [3, 5, 7, 11, 13, 17, 19, 23]:
+        for c in range(0, 211, 1):
+            frac = np.mean((a * x + c) % 211 == y)
+            best = max(best, frac)
+            if frac > 0.8:
+                break
+        if best > 0.8:
+            break
+    assert best > 0.8, best
+
+
+def test_prefetcher():
+    cfg = synthetic.DataConfig(97, 8, 4)
+    pf = synthetic.Prefetcher(lambda s: synthetic.batch_at(cfg, s), 0, depth=2)
+    try:
+        s0, b0 = pf.next()
+        s1, b1 = pf.next()
+        assert (s0, s1) == (0, 1)
+        np.testing.assert_array_equal(b0["tokens"],
+                                      synthetic.batch_at(cfg, 0)["tokens"])
+    finally:
+        pf.close()
+
+
+def test_vlm_whisper_batches():
+    cfg = synthetic.DataConfig(97, 8, 4)
+    v = synthetic.vlm_batch_at(cfg, 0, prefix=7, d_vision=16)
+    assert v["vision_embeds"].shape == (4, 7, 16)
+    w = synthetic.whisper_batch_at(cfg, 0, t_enc=30, d_model=12)
+    assert w["frames"].shape == (4, 30, 12)

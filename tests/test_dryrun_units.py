@@ -1,0 +1,64 @@
+"""Unit tests for dry-run mechanics that don't need 512 devices."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES
+from repro.launch.dryrun import collective_bytes, model_flops
+from repro.models import registry
+
+HLO = """
+HloModule jit_step
+
+%wide.body_comp (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %ar = f32[8,128] all-reduce(f32[8,128] %x), replica_groups={}
+  ROOT %t = (s32[], f32[8,128]) tuple(%i, %ar)
+}
+
+ENTRY %main (a: f32[16,256]) -> f32[16,256] {
+  %ag = f32[16,256] all-gather(f32[16,16] %a), dimensions={1}
+  %w = (s32[], f32[8,128]) while(%init), condition=%cond, body=%wide.body_comp
+  %rs = f32[4,256] reduce-scatter(f32[16,256] %ag), dimensions={0}
+  %cp = f32[16,256]{1,0} collective-permute(f32[16,256] %rs)
+  ROOT %r = f32[16,256] add(%cp, %cp)
+}
+"""
+
+
+def test_collective_parser_kinds_and_sizes():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 16 * 256 * 4
+    assert out["all-reduce"] == 8 * 128 * 4 * 2  # 2x for all-reduce
+    assert out["reduce-scatter"] == 4 * 256 * 4
+    assert out["collective-permute"] == 16 * 256 * 4
+
+
+def test_collective_parser_loop_scaling():
+    base = collective_bytes(HLO)
+    scaled = collective_bytes(HLO, loop_trip=10)
+    # only the in-body all-reduce scales
+    assert scaled["all-reduce"] == base["all-reduce"] * 10
+    assert scaled["all-gather"] == base["all-gather"]
+
+
+def test_model_flops_train_dominated_by_6nd():
+    spec = registry.get("deepseek-7b")
+    mf = model_flops(spec, spec.config, SHAPES["train_4k"])
+    n = 6.9e9
+    tokens = 256 * 4096
+    assert mf > 6 * n * tokens  # includes attention term
+    assert mf < 6 * n * tokens * 1.5
+
+
+def test_model_flops_decode_small():
+    spec = registry.get("deepseek-7b")
+    mf = model_flops(spec, spec.config, SHAPES["decode_32k"])
+    # decode: 2*N*B + attention-over-cache
+    assert 2 * 6.9e9 * 128 < mf < 2 * 6.9e9 * 128 * 3
+
+
+def test_long_500k_skip_flags():
+    assert registry.get("rwkv6-7b").supports_long
+    assert registry.get("recurrentgemma-2b").supports_long
+    assert not registry.get("qwen2-72b").supports_long
+    assert not registry.get("gemma2-27b").supports_long

@@ -1,0 +1,112 @@
+"""Pallas kernels vs pure-jnp oracle: exact equality across shape/dtype
+sweeps + hypothesis-generated shapes (the per-kernel allclose deliverable)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitpack
+from repro.kernels import ops, ref
+
+SHAPES = [
+    (8, 32, 8),
+    (5, 33, 7),  # K not multiple of 32
+    (128, 256, 128),
+    (17, 100, 39),
+    (1, 1, 1),
+    (130, 4096, 120),
+    (256, 2048, 64),
+]
+
+
+def _mats(rng, m, k, n, dtype=np.float32):
+    a = jnp.asarray(rng.standard_normal((m, k)), dtype)
+    w = jnp.asarray(rng.standard_normal((k, n)), dtype)
+    return a, w
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("backend", ["xla", "vpu", "mxu"])
+def test_xnor_gemm_matches_float_sign_dot(rng, m, k, n, backend):
+    a, w = _mats(rng, m, k, n)
+    oracle = np.asarray(ref.sign_gemm_ref(a, w)).astype(np.int32)
+    ap = bitpack.pack_sign(a)
+    wp = bitpack.pack_sign(w.T)
+    got = ops.xnor_gemm(ap, wp, k_true=k, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got), oracle)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_binary_dot_end_to_end(rng, m, k, n):
+    a, w = _mats(rng, m, k, n)
+    oracle = np.asarray(ref.sign_gemm_ref(a, w))
+    got = ops.binary_dot(a, bitpack.pack_sign(w.T), k_true=k)
+    np.testing.assert_array_equal(np.asarray(got), oracle)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16, jnp.bfloat16])
+def test_xnor_gemm_dtype_sweep(rng, dtype):
+    a, w = _mats(rng, 32, 96, 16, dtype)
+    oracle = np.asarray(ref.sign_gemm_ref(a, w)).astype(np.int32)
+    got = ops.xnor_gemm(
+        bitpack.pack_sign(a), bitpack.pack_sign(w.T), k_true=96, backend="vpu"
+    )
+    np.testing.assert_array_equal(np.asarray(got), oracle)
+
+
+def test_pack_kernel_matches_ref(rng):
+    x = jnp.asarray(rng.standard_normal((100, 1000)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.pack_activations(x)), np.asarray(bitpack.pack_sign(x))
+    )
+
+
+def test_pack_unpack_roundtrip(rng):
+    x = jnp.asarray(rng.standard_normal((10, 77)), jnp.float32)
+    u = bitpack.unpack_sign(bitpack.pack_sign(x), 77)
+    np.testing.assert_array_equal(
+        np.asarray(u), np.where(np.asarray(x) >= 0, 1.0, -1.0)
+    )
+
+
+def test_counts_vs_dot_eq2():
+    """Listing 3 counts and the ±1 dot satisfy Eq. 2 exactly."""
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.standard_normal((9, 130)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((130, 11)), jnp.float32)
+    ap, wp = bitpack.pack_sign(a), bitpack.pack_sign(w.T)
+    counts = np.asarray(ref.xnor_counts_ref(ap, wp, 130))
+    dot = np.asarray(ref.xnor_gemm_ref(ap, wp, 130))
+    np.testing.assert_array_equal(counts, (dot + 130) // 2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 200),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31),
+    backend=st.sampled_from(["vpu", "mxu", "xla"]),
+)
+def test_xnor_gemm_hypothesis(m, k, n, seed, backend):
+    rng = np.random.default_rng(seed)
+    a, w = _mats(rng, m, k, n)
+    oracle = np.asarray(ref.sign_gemm_ref(a, w)).astype(np.int32)
+    got = ops.xnor_gemm(
+        bitpack.pack_sign(a), bitpack.pack_sign(w.T), k_true=k, backend=backend
+    )
+    np.testing.assert_array_equal(np.asarray(got), oracle)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 50), k=st.integers(1, 130), seed=st.integers(0, 2**31)
+)
+def test_pack_hypothesis(rows, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rows, k)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.pack_activations(x)), np.asarray(bitpack.pack_sign(x))
+    )

@@ -1,0 +1,108 @@
+"""The paper's §2.2.2 exact-match invariant: the float/MXU training path and
+the packed xnor serving path produce IDENTICAL outputs, for dense and conv,
+across hypothesis-generated shapes and all layer options."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import converter, qlayers
+from repro.core.policy import QuantPolicy, QuantSpec
+
+
+def _packed(params, policy=None):
+    packed, _ = converter.convert({"l": params}, policy or QuantPolicy.binary())
+    return packed["l"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 9),
+    d_in=st.integers(1, 130),
+    d_out=st.integers(1, 40),
+    seed=st.integers(0, 2**31),
+    backend=st.sampled_from(["vpu", "mxu", "xla"]),
+)
+def test_dense_train_eq_packed(b, d_in, d_out, seed, backend):
+    key = jax.random.PRNGKey(seed)
+    p = qlayers.dense_init(key, d_in, d_out)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (b, d_in))
+    spec = QuantSpec(w_bits=1, a_bits=1)
+    y_train = qlayers.qdense(p, x, spec, compute_dtype=jnp.float32)
+    y_packed = qlayers.qdense(_packed(p), x, spec, compute_dtype=jnp.float32,
+                              xnor_backend=backend)
+    np.testing.assert_array_equal(np.asarray(y_train), np.asarray(y_packed))
+
+
+@pytest.mark.parametrize("scale", [False, True])
+@pytest.mark.parametrize("xnor_range", [False, True])
+def test_dense_options_equivalence(scale, xnor_range):
+    key = jax.random.PRNGKey(0)
+    p = qlayers.dense_init(key, 64, 32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 64))
+    spec = QuantSpec(w_bits=1, a_bits=1, scale=scale, xnor_range=xnor_range)
+    pol = QuantPolicy(w_bits=1, a_bits=1, scale=scale, xnor_range=xnor_range)
+    y_train = qlayers.qdense(p, x, spec, compute_dtype=jnp.float32)
+    y_packed = qlayers.qdense(_packed(p, pol), x, spec,
+                              compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_train), np.asarray(y_packed),
+                               rtol=1e-6, atol=1e-6)
+    if xnor_range:  # outputs are match-counts: integers in [0, d_in]
+        yv = np.asarray(y_packed)
+        if not scale:
+            np.testing.assert_array_equal(yv, np.round(yv))
+            assert (yv >= 0).all() and (yv <= 64).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    hw=st.integers(4, 12),
+    c_in=st.integers(1, 8),
+    c_out=st.integers(1, 8),
+    kh=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    seed=st.integers(0, 2**31),
+)
+def test_conv_train_eq_packed(hw, c_in, c_out, kh, stride, padding, seed):
+    if padding == "VALID" and kh > hw:
+        return
+    key = jax.random.PRNGKey(seed)
+    p = qlayers.conv_init(key, kh, kh, c_in, c_out)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, hw, hw, c_in))
+    spec = QuantSpec(w_bits=1, a_bits=1)
+    y_train = qlayers.qconv(p, x, spec, stride=stride, padding=padding,
+                            compute_dtype=jnp.float32)
+    y_packed = qlayers.qconv(_packed(p), x, spec, stride=stride,
+                             padding=padding, compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(y_train), np.asarray(y_packed))
+
+
+def test_kbit_dense_changes_with_bits():
+    """k-bit (2..31) stays fake-quantized; more bits -> closer to fp."""
+    key = jax.random.PRNGKey(0)
+    p = qlayers.dense_init(key, 128, 64)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (8, 128))
+    y_fp = qlayers.qdense(p, x, QuantSpec(), compute_dtype=jnp.float32)
+    errs = []
+    for k in (2, 4, 8):
+        y_k = qlayers.qdense(p, x, QuantSpec(w_bits=k, a_bits=k),
+                             compute_dtype=jnp.float32)
+        errs.append(float(jnp.mean(jnp.abs(y_k - y_fp))))
+    assert errs[0] > errs[1] > errs[2], errs
+
+
+def test_gradients_flow_through_all_bit_widths():
+    key = jax.random.PRNGKey(0)
+    p = qlayers.dense_init(key, 32, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32)) * 0.5
+    for bits in (1, 2, 8, 32):
+        spec = QuantSpec(w_bits=bits, a_bits=bits)
+        g = jax.grad(
+            lambda p: (qlayers.qdense(p, x, spec,
+                                      compute_dtype=jnp.float32) ** 2).sum()
+        )(p)
+        assert np.isfinite(np.asarray(g["w"])).all()
+        assert np.abs(np.asarray(g["w"])).sum() > 0, bits

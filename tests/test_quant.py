@@ -1,0 +1,91 @@
+"""Quantizer properties (paper Eq. 1/Eq. 2 + STE semantics), hypothesis-
+driven."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+)
+def test_quantize_k_grid_and_range(k, seed):
+    """Eq. 1: output lies on the k-bit grid in [0, 1]."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random(100), jnp.float32)
+    q = np.asarray(quant.quantize_k(x, k))
+    n = 2**k - 1
+    np.testing.assert_allclose(q * n, np.round(q * n), atol=1e-4)
+    assert (q >= 0).all() and (q <= 1).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(1, 8), seed=st.integers(0, 2**31))
+def test_quantize_k_idempotent(k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random(64), jnp.float32)
+    q1 = quant.quantize_k(x, k)
+    q2 = quant.quantize_k(q1, k)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(2, 8), seed=st.integers(0, 2**31))
+def test_quantize_weight_range(k, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal(128) * 3, jnp.float32)
+    q = np.asarray(quant.quantize_weight(w, k))
+    assert (q >= -1 - 1e-5).all() and (q <= 1 + 1e-5).all()
+    # monotone non-decreasing w.r.t. input ordering
+    order = np.argsort(np.asarray(w))
+    assert (np.diff(q[order]) >= -1e-6).all()
+
+
+def test_sign_ste_values_and_grad():
+    x = jnp.asarray([-2.0, -0.5, 0.0, 0.5, 2.0])
+    s = np.asarray(quant.sign_ste(x))
+    np.testing.assert_array_equal(s, [-1, -1, 1, 1, 1])
+    g = jax.grad(lambda x: quant.sign_ste(x).sum())(x)
+    # clipped STE: gradient only where |x| <= 1
+    np.testing.assert_array_equal(np.asarray(g), [0, 1, 1, 1, 0])
+
+
+def test_quantize_act_binary_is_sign():
+    x = jnp.asarray([-3.0, -0.1, 0.0, 0.2])
+    np.testing.assert_array_equal(
+        np.asarray(quant.quantize_act(x, 1)), [-1, -1, 1, 1]
+    )
+
+
+def test_bits_32_identity():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(16), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(quant.quantize_act(x, 32)),
+                                  np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(quant.quantize_weight(x, 32)),
+                                  np.asarray(x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 500), seed=st.integers(0, 2**31))
+def test_eq2_roundtrip(n, seed):
+    """Eq. 2 maps [-n, n] step 2 <-> [0, n] step 1, exactly."""
+    rng = np.random.default_rng(seed)
+    matches = rng.integers(0, n + 1, 50)
+    dot = 2 * matches - n  # ±1 dot with n terms
+    got = np.asarray(quant.xnor_range_map(jnp.asarray(dot, jnp.float32), n))
+    np.testing.assert_array_equal(got, matches)
+    back = np.asarray(quant.dot_range_map(jnp.asarray(matches, jnp.float32), n))
+    np.testing.assert_array_equal(back, dot)
+
+
+def test_dorefa_act_clip_range():
+    x = jnp.asarray([-1.0, 0.3, 0.9, 2.0])
+    q = np.asarray(quant.quantize_act(x, 2))
+    assert q[0] == 0.0 and q[-1] == 1.0
+    grid = np.round(q * 3) / 3
+    np.testing.assert_allclose(q, grid, atol=1e-6)
