@@ -14,7 +14,6 @@ templates + noise.  Linearly separable-ish; LeNet learns it in ~60 steps.
 
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

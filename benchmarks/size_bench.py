@@ -8,7 +8,7 @@ import jax
 
 from repro.core import converter
 from repro.core.policy import QuantPolicy
-from repro.models import cnn, lm, registry
+from repro.models import cnn, registry
 
 
 def table1_rows():

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core import converter
 from repro.core.policy import QuantPolicy
+from repro.kernels.dispatch import GemmConfig
 from repro.launch import specs as specs_lib
 from repro.models import lm, registry
 from repro.nn.common import QCtx
@@ -33,7 +34,7 @@ def main():
     cfg = spec.smoke
     policy = QuantPolicy.binary()
     ctx = QCtx(policy=policy, compute_dtype=jnp.float32,
-               xnor_backend=args.backend)
+               gemm_config=GemmConfig(backend=args.backend))
 
     print(f"== packed serving, {args.arch} (reduced config) ==")
     params = lm.init(jax.random.PRNGKey(0), cfg)

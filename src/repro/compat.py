@@ -1,0 +1,32 @@
+"""Small jax version-compat shims.
+
+The codebase targets the modern jax surface (``jax.shard_map`` with
+``check_vma``, two-argument ``AbstractMesh``); this module papers over the
+renames so the same code runs on the 0.4.x series installed here.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AbstractMesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the ``check_vma`` knob on any jax version
+    (older releases call it ``check_rep`` and live in jax.experimental)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> AbstractMesh:
+    """``AbstractMesh(shape, axes)`` across the signature change (older jax
+    takes one tuple of (name, size) pairs)."""
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))

@@ -13,7 +13,7 @@ else (first/last layers, norms, biases, recurrence gates) is left untouched.
 
 ``convert(...)`` returns the new pytree plus a :class:`SizeReport` with the
 paper's accounting: float bytes before, bytes after, compression ratio
-(ResNet-18: 44.7 MB -> 1.5 MB, 29x — reproduced in benchmarks/model_size.py).
+(ResNet-18: 44.7 MB -> 1.5 MB, 29x — reproduced in benchmarks/size_bench.py).
 """
 
 from __future__ import annotations

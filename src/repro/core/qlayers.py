@@ -7,8 +7,14 @@ Two execution paths per layer, switched by what the params pytree contains:
   quantized with STE and the contraction runs on the MXU in ``compute_dtype``
   — the paper's GPU-training path (§2.2.2), bit-exact with the packed path.
 * **packed serving** (params have ``w_packed``): weights are stored as uint32
-  words (32 per word, paper §2.2.3); activations are binarized+packed on the
-  fly and the contraction is the Pallas xnor GEMM (``kernels/ops.binary_dot``).
+  words (32 per word, paper §2.2.3); the contraction goes through
+  ``kernels/dispatch.quant_gemm`` — the single dispatch layer that owns
+  activation packing, backend/tile selection and pad correction.
+
+Both paths share ONE epilogue (scale / Eq. 2 range map / bias / cast): the
+layer builds an :class:`~repro.kernels.dispatch.EpilogueSpec` from its
+:class:`QuantSpec` and ``dispatch.apply_epilogue`` applies it — that single
+implementation is what keeps the two paths bit-exact.
 
 Packed layout: ``w_packed`` is ``(d_out, Kw)`` — the *transposed* weight
 packed along the contraction axis, which is the layout the xnor GEMM wants
@@ -24,9 +30,22 @@ import jax.numpy as jnp
 
 from repro.core import quant
 from repro.core.policy import QuantSpec
-from repro.kernels import ops
+from repro.kernels import dispatch
+from repro.kernels.dispatch import GemmConfig
 
 Params = dict[str, Any]
+
+
+def _gemm_config(
+    gemm_config: GemmConfig | None, xnor_backend: str | None
+) -> GemmConfig:
+    """Resolve the layer's GemmConfig.  ``xnor_backend`` is the legacy
+    string knob, kept as an alias for callers that predate dispatch."""
+    if gemm_config is not None:
+        return gemm_config
+    if xnor_backend is not None:
+        return GemmConfig(backend=xnor_backend)
+    return dispatch.DEFAULT_GEMM_CONFIG
 
 
 def dense_init(
@@ -52,56 +71,58 @@ def qdense(
     spec: QuantSpec,
     *,
     compute_dtype=jnp.bfloat16,
-    xnor_backend: str = "vpu",
+    gemm_config: GemmConfig | None = None,
+    xnor_backend: str | None = None,
 ) -> jax.Array:
     """Apply a dense layer under a :class:`QuantSpec`.
 
     Returns ``(..., d_out)`` in ``compute_dtype`` (packed path returns the
     same values — §2.2.2's exact-match invariant, enforced by tests).
     """
+    cfg = _gemm_config(gemm_config, xnor_backend)
     if "w_packed" in params:
-        return _qdense_packed(
-            params, x, spec, compute_dtype=compute_dtype, backend=xnor_backend
-        )
+        return _qdense_packed(params, x, spec,
+                              compute_dtype=compute_dtype, config=cfg)
 
     w = params["w"]
     d_in = w.shape[0]
+    bias = params.get("b")
     if spec.is_fp:
         y = jnp.matmul(x.astype(compute_dtype), w.astype(compute_dtype))
+        ep = dispatch.EpilogueSpec(bias=bias is not None,
+                                   out_dtype=compute_dtype)
+        scale_op = None
     else:
         wq = quant.quantize_weight(w.astype(jnp.float32), spec.w_bits)
         xq = quant.quantize_act(x.astype(jnp.float32), spec.a_bits)
         y = jnp.matmul(xq.astype(compute_dtype), wq.astype(compute_dtype))
-        if spec.scale:
-            y = y * quant.weight_scale(w)[0].astype(compute_dtype)
-        if spec.xnor_range and spec.is_binary and spec.a_bits == 1:
-            y = quant.xnor_range_map(y, d_in)
-    if "b" in params:
-        y = y + params["b"].astype(compute_dtype)
-    return y.astype(compute_dtype)
+        ep = dispatch.epilogue_from_spec(spec, bias=bias is not None,
+                                         out_dtype=compute_dtype)
+        scale_op = (quant.weight_scale(w)[0].astype(compute_dtype)
+                    if ep.scale else None)
+    if bias is not None:
+        bias = bias.astype(compute_dtype)
+    return dispatch.apply_epilogue(y, k_true=d_in, epilogue=ep,
+                                   scale=scale_op, bias=bias)
 
 
 def _qdense_packed(
-    params: Params, x: jax.Array, spec: QuantSpec, *, compute_dtype, backend
+    params: Params, x: jax.Array, spec: QuantSpec, *, compute_dtype,
+    config: GemmConfig
 ) -> jax.Array:
     assert spec.is_binary and spec.a_bits == 1, (
         "packed serving is the 1-bit path; k-bit weights stay fake-quantized"
     )
     k_true = x.shape[-1]
-    dot = ops.binary_dot(
-        x.astype(jnp.float32),
-        params["w_packed"],
+    call = dispatch.QuantGemmCall(
         k_true=k_true,
-        backend=backend,
-        out_dtype=jnp.float32,
+        config=config,
+        epilogue=dispatch.epilogue_from_spec(
+            spec, bias="b" in params, out_dtype=compute_dtype
+        ),
     )
-    if spec.scale:
-        dot = dot * params["scale"]
-    if spec.xnor_range:
-        dot = quant.xnor_range_map(dot, k_true)
-    if "b" in params:
-        dot = dot + params["b"]
-    return dot.astype(compute_dtype)
+    return call(x.astype(jnp.float32), params["w_packed"],
+                scale=params.get("scale"), bias=params.get("b"))
 
 
 # ---------------------------------------------------------------------------
@@ -132,12 +153,14 @@ def qconv(
     stride: int = 1,
     padding: str = "SAME",
     compute_dtype=jnp.bfloat16,
-    xnor_backend: str = "vpu",
+    gemm_config: GemmConfig | None = None,
+    xnor_backend: str | None = None,
 ) -> jax.Array:
+    cfg = _gemm_config(gemm_config, xnor_backend)
     if "w_packed" in params:
         return _qconv_packed(
             params, x, spec, stride=stride, padding=padding,
-            compute_dtype=compute_dtype, backend=xnor_backend,
+            compute_dtype=compute_dtype, config=cfg,
         )
     w = params["w"]
     if spec.is_fp:
@@ -157,12 +180,18 @@ def qconv(
         padding=padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     )
-    if not spec.is_fp and spec.scale:
-        alpha = jnp.mean(jnp.abs(w), axis=(0, 1, 2))
-        y = y * alpha.astype(compute_dtype)
-    if not spec.is_fp and spec.xnor_range and spec.is_binary and spec.a_bits == 1:
-        y = quant.xnor_range_map(y, w.shape[0] * w.shape[1] * w.shape[2])
-    return y.astype(compute_dtype)
+    if spec.is_fp:
+        ep = dispatch.EpilogueSpec(out_dtype=compute_dtype)
+        scale_op = None
+    else:
+        ep = dispatch.epilogue_from_spec(spec, bias=False,
+                                         out_dtype=compute_dtype)
+        scale_op = (jnp.mean(jnp.abs(w), axis=(0, 1, 2)).astype(compute_dtype)
+                    if ep.scale else None)
+    return dispatch.apply_epilogue(
+        y, k_true=w.shape[0] * w.shape[1] * w.shape[2], epilogue=ep,
+        scale=scale_op,
+    )
 
 
 def _pad_same_pm1(x: jax.Array, h: int, w: int, stride: int) -> jax.Array:
@@ -209,18 +238,18 @@ def _im2col(x: jax.Array, h: int, w: int, stride: int, padding: str):
 
 
 def _qconv_packed(
-    params, x, spec, *, stride, padding, compute_dtype, backend
+    params, x, spec, *, stride, padding, compute_dtype, config: GemmConfig
 ):
     h, w, c_in, c_out = params["shape_hwio"]
     cols, (n, oh, ow) = _im2col(
         x.astype(jnp.float32), h, w, stride, padding
     )
-    dot = ops.binary_dot(
-        cols, params["w_packed"], k_true=h * w * c_in, backend=backend,
-        out_dtype=jnp.float32,
+    call = dispatch.QuantGemmCall(
+        k_true=h * w * c_in,
+        config=config,
+        epilogue=dispatch.epilogue_from_spec(
+            spec, bias=False, out_dtype=compute_dtype
+        ),
     )
-    if spec.scale:
-        dot = dot * params["scale"]
-    if spec.xnor_range:
-        dot = quant.xnor_range_map(dot, h * w * c_in)
-    return dot.reshape(n, oh, ow, c_out).astype(compute_dtype)
+    dot = call(cols, params["w_packed"], scale=params.get("scale"))
+    return dot.reshape(n, oh, ow, c_out)

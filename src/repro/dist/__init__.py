@@ -1,0 +1,2 @@
+"""Distribution concerns: the sharding resolver (``dist.sharding``) and
+1-bit error-feedback gradient compression (``dist.compress``)."""

@@ -1,0 +1,239 @@
+"""Sharding resolver: partition-spec templates -> mesh-legal PartitionSpecs.
+
+The launchers and the multi-pod dry-run describe *intent* ("shard d_ff over
+'model', batch over ('pod', 'data')"); this module resolves intent against a
+concrete (or abstract) mesh, demoting any dimension whose size does not
+divide the axis product — and logging every demotion, because a silent
+demotion is how a 70 s/step collective sneaks into a train loop.
+
+Path-based parameter rules follow the Megatron convention:
+
+* ``embed/table``                 row (vocab) sharded over 'model'
+* column-parallel projections (``q/k/v/up/gate/lm_head/...``: ``(d_in,
+  d_out)``) shard d_out over 'model'
+* row-parallel projections (``o/down/wo/out``) shard d_in over 'model'
+* MoE expert stacks ``(E, ...)`` shard the expert axis over 'model' (EP)
+* packed binary weights ``w_packed (d_out, Kw)`` shard d_out over 'model'
+  except row-parallel layers (their contraction axis is packed — never
+  shard packed words)
+* norms / biases / scales replicate
+
+``master_pspecs`` additionally spreads the first still-replicated,
+divisible dimension of every leaf over 'data' (ZeRO-1 optimizer-state
+layout).  KV caches shard (batch, sequence) over (dp-axes, 'model') — the
+flash-decoding layout: the cache sequence dim is 'model'-sharded for every
+arch regardless of kv-head count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+_DP_AXES = ("pod", "data")  # batch-like axes, outermost first
+
+
+@dataclasses.dataclass(frozen=True)
+class Demotion:
+    path: str
+    dim: int
+    shape: tuple[int, ...]
+    wanted: tuple[str, ...]
+    got: tuple[str, ...]
+
+    def __str__(self) -> str:
+        return (f"{self.path or '<leaf>'}: dim {self.dim} of {self.shape} "
+                f"wanted {self.wanted} -> got {self.got or '(replicated)'}")
+
+
+class Resolver:
+    """Resolves pspec templates against one mesh, accumulating demotions."""
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+        self.axis_sizes = dict(zip(mesh.axis_names, _mesh_shape(mesh)))
+        self.demotions: list[Demotion] = []
+
+    # -- core --------------------------------------------------------------
+
+    def resolve(self, template, shape, path: str = "") -> P:
+        """Template (one entry per dim: None | axis | tuple of axes) ->
+        a PartitionSpec legal on this mesh (non-divisible dims demoted)."""
+        entries = []
+        for dim, want in enumerate(template):
+            entries.append(self._resolve_dim(want, shape, dim, path))
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def _resolve_dim(self, want, shape, dim: int, path: str,
+                     log: bool = True):
+        if want is None:
+            return None
+        wanted = (want,) if isinstance(want, str) else tuple(want)
+        # axes the mesh actually has (missing axes are not a demotion)
+        axes = [a for a in wanted if a in self.axis_sizes]
+        got = list(axes)
+        while got and shape[dim] % _prod(self.axis_sizes[a] for a in got):
+            got.pop(0)  # drop outermost first ('pod' before 'data')
+        if log and tuple(got) != tuple(axes):
+            self.demotions.append(
+                Demotion(path, dim, tuple(shape), tuple(axes), tuple(got))
+            )
+        if not got:
+            return None
+        return got[0] if len(got) == 1 else tuple(got)
+
+    def demotion_log(self) -> str:
+        return "\n".join(str(d) for d in self.demotions)
+
+    # -- parameters --------------------------------------------------------
+
+    # (regex over the leaf path, template builder given the leaf shape).
+    # First match wins; ``None`` from a builder falls through to defaults.
+    _ROW_PARALLEL = r"/(o|down|wo|out|proj_out)/(w|w_packed)$"
+
+    def _param_template(self, path: str, shape, overrides):
+        for pat, tpl in (overrides or {}).items():
+            if re.search(pat, path):
+                return tpl
+        ndim = len(shape)
+        if re.search(r"embed/table$", path):
+            return ("model", None)
+        if re.search(self._ROW_PARALLEL, path):
+            # row-parallel: shard d_in; packed form has d_in bit-packed in
+            # Kw words (never sharded) so the packed leaf replicates
+            return ("model", None) if path.endswith("/w") else (None, None)
+        if path.endswith("_packed") or path.endswith("w_packed"):
+            # packed leaves: (d_out, Kw) or expert stack (E, d_out, Kw)
+            return ("model",) + (None,) * (ndim - 1)
+        if path.endswith("/w") and ndim == 2:
+            return (None, "model")  # column-parallel default
+        if path.endswith("/w") and ndim == 4:
+            return (None, None, None, "model")  # conv HWIO: shard c_out
+        if ndim == 3 and re.search(r"experts/", path):
+            return ("model", None, None)  # EP: expert axis over 'model'
+        return (None,) * ndim  # norms, biases, scales, metadata
+
+    def params_pspecs(self, params: Pytree, overrides=None) -> Pytree:
+        """Compute-layout PartitionSpecs for a parameter pytree."""
+        return self._map_with_path(
+            params,
+            lambda path, leaf: self.resolve(
+                self._param_template(path, leaf.shape, overrides),
+                leaf.shape, path,
+            ),
+        )
+
+    def master_pspecs(self, params: Pytree, overrides=None) -> Pytree:
+        """ZeRO-1 master/optimizer layout: the compute layout plus 'data'
+        on the first still-replicated divisible dim of every leaf."""
+
+        def one(path, leaf):
+            tpl = list(self._param_template(path, leaf.shape, overrides))
+            # log=False: the compute-layout pass (params_pspecs) already
+            # records these demotions; logging here would double-count
+            resolved = [
+                self._resolve_dim(w, leaf.shape, d, path, log=False)
+                for d, w in enumerate(tpl)
+            ]
+            data = self.axis_sizes.get("data")
+            if data:
+                for d, entry in enumerate(resolved):
+                    if entry is None and leaf.shape[d] % data == 0:
+                        resolved[d] = "data"
+                        break
+            while resolved and resolved[-1] is None:
+                resolved.pop()
+            return P(*resolved)
+
+        return self._map_with_path(params, one)
+
+    def attn_overrides(self, cfg) -> dict:
+        """Per-arch parameter-rule overrides.
+
+        GQA K/V projections whose head count does not divide the 'model'
+        axis must replicate their output dim (head-granular sharding would
+        split a head across shards even when the flat width divides)."""
+        attn = getattr(cfg, "attn", None)
+        msize = self.axis_sizes.get("model", 1)
+        if attn is None or msize <= 1:
+            return {}
+        n_kv = getattr(attn, "n_kv_heads", None) or attn.n_heads
+        if n_kv % msize == 0:
+            return {}
+        return {r"attn/(k|v)/(w|w_packed)$": (None, None)}
+
+    # -- activations / state ----------------------------------------------
+
+    def batch_pspecs(self, batch: Pytree) -> Pytree:
+        """Batch-like tensors: dim 0 over the data axes, rest replicated."""
+        return self._map_with_path(
+            batch,
+            lambda path, leaf: self.resolve(
+                (_DP_AXES,) + (None,) * (len(leaf.shape) - 1),
+                leaf.shape, path,
+            ),
+        )
+
+    def cache_pspecs(self, cache: Pytree) -> Pytree:
+        """KV-cache / recurrent-state layout: (batch, seq-or-state, ...) ->
+        (data axes, 'model', ...) — the flash-decoding layout (cache
+        sequence dim over 'model' for every arch; kv-head count
+        irrelevant)."""
+
+        def one(path, leaf):
+            ndim = len(leaf.shape)
+            if ndim < 2:
+                return P()
+            tpl = (_DP_AXES, "model") + (None,) * (ndim - 2)
+            return self.resolve(tpl, leaf.shape, path)
+
+        return self._map_with_path(cache, one)
+
+    # -- utilities ---------------------------------------------------------
+
+    def shardings(self, pspecs: Pytree) -> Pytree:
+        """PartitionSpec pytree -> NamedSharding pytree on this mesh."""
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s),
+            pspecs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    @staticmethod
+    def _map_with_path(tree: Pytree, fn) -> Pytree:
+        def rec(node, path):
+            if isinstance(node, dict):
+                return {
+                    k: rec(v, f"{path}/{k}" if path else str(k))
+                    for k, v in node.items()
+                }
+            if isinstance(node, (list, tuple)):
+                return type(node)(
+                    rec(v, f"{path}/{i}" if path else str(i))
+                    for i, v in enumerate(node)
+                )
+            return fn(path, node)
+
+        return rec(tree, "")
+
+
+def _mesh_shape(mesh) -> tuple[int, ...]:
+    shape = mesh.shape
+    if hasattr(shape, "values"):  # Mesh/AbstractMesh expose an axis dict
+        return tuple(shape.values())
+    return tuple(shape)
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= x
+    return out

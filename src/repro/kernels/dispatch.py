@@ -1,0 +1,559 @@
+"""Unified quantized-GEMM dispatch — the single execution path for every
+binary GEMM in the system (BMXNet §2.2's one-kernel-serves-all invariant).
+
+Every packed contraction — dense, conv-im2col, and the MoE expert stack —
+funnels through this module, which owns the four concerns that used to be
+scattered across ``core/qlayers.py``, ``kernels/ops.py`` and ``nn/mlp.py``:
+
+1. **binarize + pack** of float activations (paper Fig. 1's "binarize
+   input" stage),
+2. **backend selection** via a registry (``"vpu"``, ``"mxu"``, ``"xla"``;
+   :func:`register_backend` adds more) plus a per-(M, N, Kw) tile-size
+   heuristic table (:func:`select_tiles`),
+3. **pad-correction arithmetic** — each backend's exact-dot recovery from
+   its raw kernel output (``k_true - 2·mismatch`` for popcount, padded-dot
+   minus pad bits for the MXU unpack kernel),
+4. the **fused epilogue** (:class:`EpilogueSpec`: XNOR-Net alpha scale,
+   Eq. 2 xnor-range map, bias, output dtype) — the ONE place this
+   arithmetic exists; ``qlayers`` builds specs via
+   :func:`epilogue_from_spec` and applies via :func:`apply_epilogue`.
+
+Entry points:
+
+* :class:`QuantGemmCall` / :func:`quant_gemm` — (…, K) float activations
+  against (N, Kw) packed weights, epilogue fused.
+* :func:`quant_gemm_grouped` — sorted rows against an (E, N, Kw) expert
+  stack with ragged group sizes: the MoE packed-serving GEMM.  Pallas
+  backends bucket rows per expert and run the batched (expert-grid)
+  kernels so only packed words cross HBM; the ``"xla"`` backend lowers to
+  ``lax.ragged_dot`` for dry-run cost analysis.
+* :func:`packed_gemm` — packed-x-packed primitive (what ``ops.xnor_gemm``
+  wraps).
+
+On this CPU container Pallas runs in interpret mode; on a real TPU set
+``REPRO_PALLAS_INTERPRET=0`` (or ``GemmConfig(interpret=False)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack, quant
+from repro.core.policy import QuantSpec
+from repro.kernels import ref
+from repro.kernels.pack_bits import pack_sign_pallas
+from repro.kernels.xnor_gemm import (
+    xnor_dot_mxu_batched_pallas,
+    xnor_dot_mxu_pallas,
+    xnor_mismatch_batched_pallas,
+    xnor_mismatch_pallas,
+)
+
+WORD_BITS = bitpack.WORD_BITS
+
+
+def _env_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+
+
+# ---------------------------------------------------------------------------
+# Tile selection: a per-backend heuristic table replacing the ad-hoc
+# min/round_up/while-divides logic that used to live inline in ops.xnor_gemm.
+# Operands are padded up to the selected tile, so any entry is *correct*;
+# the table picks the smallest tile that covers the operand (small problems
+# avoid padding waste, large problems get the full VMEM-friendly tile).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    bm: int
+    bn: int
+    bkw: int  # K-words per step (bkw * 32 binary values)
+    chunk_words: int  # vpu inner xor/popcount chunk
+
+
+# Row-tile ladder: smallest entry >= the operand dim wins (last entry caps).
+# K-word ladder likewise.  Separate rows per backend: the MXU kernel unpacks
+# to (rows, bkw*32) int8 in VMEM so its K-step is kept smaller; the VPU
+# popcount kernel streams words and tolerates a deeper K-block.
+_TILE_TABLE: dict[str, dict[str, tuple[int, ...]]] = {
+    "vpu": {"rows": (8, 16, 32, 64, 128), "kw": (8, 16, 32, 64)},
+    "mxu": {"rows": (8, 16, 32, 64, 128), "kw": (8, 16, 32)},
+}
+_DEFAULT_CHUNK_WORDS = 8
+
+
+def _pick(size: int, ladder: tuple[int, ...]) -> int:
+    for step in ladder:
+        if size <= step:
+            return step
+    return ladder[-1]
+
+
+def _chunk_for(bkw: int, want: int) -> int:
+    """Largest chunk <= ``want`` that divides ``bkw`` — the VPU kernel
+    iterates bkw // chunk_words chunks and would silently skip tail words
+    otherwise."""
+    cw = max(1, min(want, bkw))
+    while bkw % cw:
+        cw -= 1
+    return cw
+
+
+@functools.lru_cache(maxsize=None)
+def select_tiles(m: int, n: int, kw: int, backend: str) -> TileConfig:
+    """Heuristic (M, N, Kw) -> tile sizes for ``backend`` (table-driven)."""
+    rule = _TILE_TABLE.get(backend, _TILE_TABLE["vpu"])
+    bkw = _pick(kw, rule["kw"])
+    return TileConfig(
+        bm=_pick(m, rule["rows"]),
+        bn=_pick(n, rule["rows"]),
+        bkw=bkw,
+        chunk_words=_chunk_for(bkw, _DEFAULT_CHUNK_WORDS),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Config + epilogue specs (static, hashable — safe as jit static args)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmConfig:
+    """How a quantized GEMM executes: backend + optional tile overrides.
+
+    ``interpret=None`` reads REPRO_PALLAS_INTERPRET (default: interpret,
+    the only mode available on this CPU container).
+    """
+
+    backend: str = "vpu"
+    bm: int | None = None
+    bn: int | None = None
+    bkw: int | None = None
+    chunk_words: int | None = None
+    interpret: bool | None = None
+
+    def tiles(self, m: int, n: int, kw: int) -> TileConfig:
+        t = select_tiles(m, n, kw, self.backend)
+        bkw = self.bkw or t.bkw
+        return TileConfig(
+            bm=self.bm or t.bm,
+            bn=self.bn or t.bn,
+            bkw=bkw,
+            chunk_words=_chunk_for(bkw, self.chunk_words
+                                   or _DEFAULT_CHUNK_WORDS),
+        )
+
+    @property
+    def _interpret(self) -> bool:
+        return self.interpret if self.interpret is not None else _env_interpret()
+
+
+DEFAULT_GEMM_CONFIG = GemmConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueSpec:
+    """What is fused after the ±1 dot: XNOR-Net per-channel alpha, the
+    paper's Eq. 2 range map, bias add, and the output cast — in that order
+    (the order every pre-dispatch copy of this code used)."""
+
+    scale: bool = False
+    xnor_range: bool = False
+    bias: bool = False
+    out_dtype: Any = jnp.float32
+
+
+def epilogue_from_spec(
+    qspec: QuantSpec, *, bias: bool, out_dtype
+) -> EpilogueSpec:
+    """Map a layer's :class:`QuantSpec` to the fused epilogue it implies.
+
+    The Eq. 2 range map only applies to true 1-bit GEMMs, and the alpha
+    scale never applies to full-precision layers — both rules live here so
+    layer code cannot drift."""
+    return EpilogueSpec(
+        scale=qspec.scale and not qspec.is_fp,
+        xnor_range=(
+            qspec.xnor_range and qspec.is_binary and qspec.a_bits == 1
+        ),
+        bias=bias,
+        out_dtype=out_dtype,
+    )
+
+
+def apply_epilogue(
+    y: jax.Array,
+    *,
+    k_true: int,
+    epilogue: EpilogueSpec,
+    scale: jax.Array | None = None,
+    bias: jax.Array | None = None,
+) -> jax.Array:
+    """THE epilogue: ``((y * scale) |> Eq.2(k_true)) + bias -> out_dtype``.
+
+    Both execution paths (fake-quant train and packed serving) call this,
+    which is what keeps them bit-exact per paper §2.2.2."""
+    if epilogue.scale:
+        assert scale is not None, "epilogue.scale set but no scale operand"
+        y = y * scale
+    if epilogue.xnor_range:
+        y = quant.xnor_range_map(y, k_true)
+    if epilogue.bias:
+        assert bias is not None, "epilogue.bias set but no bias operand"
+        y = y + bias
+    return y.astype(epilogue.out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One way to execute the packed binary GEMM.
+
+    ``gemm(a_packed, b_packed, k_true, tiles, interpret) -> (M, N) int32``
+    must return the EXACT ±1 dot (pad correction included).
+
+    ``gemm_grouped(buckets, w_stack, k_true, tiles, interpret)`` contracts
+    an (E, M, Kw) activation bucket against an (E, N, Kw) weight stack.
+
+    ``from_float``: optional shortcut taking raw float activations —
+    backends that never materialise packed activations (the XLA
+    unpack-and-MXU fallback) set it and skip the pack stage.
+    """
+
+    name: str
+    gemm: Callable
+    gemm_grouped: Callable | None = None
+    from_float: Callable | None = None
+    from_float_grouped: Callable | None = None
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> None:
+    _REGISTRY[backend.name] = backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown gemm backend {name!r}; registered: "
+            f"{sorted(_REGISTRY)}"
+        ) from None
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = _round_up(x.shape[axis], mult) - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pad_tiles(a: jax.Array, b: jax.Array, tiles: TileConfig):
+    """Pad (…, M, Kw) and (…, N, Kw) up to tile multiples (zero words)."""
+    a = _pad_axis(_pad_axis(a, -2, tiles.bm), -1, tiles.bkw)
+    b = _pad_axis(_pad_axis(b, -2, tiles.bn), -1, tiles.bkw)
+    return a, b
+
+
+# --- vpu: the literal paper algorithm (xnor + popcount on the VPU) --------
+
+
+def _vpu_gemm(ap, bp, k_true, tiles, interpret):
+    m, n = ap.shape[0], bp.shape[0]
+    ap, bp = _pad_tiles(ap, bp, tiles)
+    mism = xnor_mismatch_pallas(
+        ap, bp, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw,
+        chunk_words=tiles.chunk_words, interpret=interpret,
+    )[:m, :n]
+    # pad bits are 0 in both operands -> 0 mismatches; Eq. 2 inverse:
+    return k_true - 2 * mism
+
+
+def _vpu_gemm_grouped(buckets, w_stack, k_true, tiles, interpret):
+    m, n = buckets.shape[1], w_stack.shape[1]
+    buckets, w_stack = _pad_tiles(buckets, w_stack, tiles)
+    mism = xnor_mismatch_batched_pallas(
+        buckets, w_stack, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw,
+        chunk_words=tiles.chunk_words, interpret=interpret,
+    )[:, :m, :n]
+    return k_true - 2 * mism
+
+
+# --- mxu: unpack packed words in VMEM, contract on the MXU ----------------
+
+
+def _mxu_gemm(ap, bp, k_true, tiles, interpret):
+    m, n = ap.shape[0], bp.shape[0]
+    ap, bp = _pad_tiles(ap, bp, tiles)
+    padded_dot = xnor_dot_mxu_pallas(
+        ap, bp, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw, interpret=interpret
+    )[:m, :n]
+    # pad bits (0 in both operands) unpack to (-1)·(-1) = +1 each
+    return padded_dot - (ap.shape[-1] * WORD_BITS - k_true)
+
+
+def _mxu_gemm_grouped(buckets, w_stack, k_true, tiles, interpret):
+    m, n = buckets.shape[1], w_stack.shape[1]
+    buckets, w_stack = _pad_tiles(buckets, w_stack, tiles)
+    padded_dot = xnor_dot_mxu_batched_pallas(
+        buckets, w_stack, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw,
+        interpret=interpret,
+    )[:, :m, :n]
+    return padded_dot - (buckets.shape[-1] * WORD_BITS - k_true)
+
+
+# --- xla: pure-jnp fallback / dry-run lowering target ---------------------
+
+
+def _xla_gemm(ap, bp, k_true, tiles, interpret):
+    del tiles, interpret
+    return ref.xnor_gemm_ref(ap, bp, k_true)
+
+
+def _xla_from_float(x2, w_packed, k_true):
+    """Weights stay bit-packed in HBM, unpack to ±1 in-graph and contract
+    on the MXU with fp32 accumulation (exact for ±1 up to 2^24 terms).
+    The popcount reference (ref.xnor_gemm_ref) stays the test oracle — its
+    (M, N, Kw) intermediate is fine for tests but not for lowering
+    1M-token prefill cells."""
+    w_pm1 = bitpack.unpack_sign(w_packed, k_true, jnp.bfloat16)  # (N, K)
+    xq = jnp.where(x2 >= 0, 1.0, -1.0).astype(jnp.bfloat16)
+    return jax.lax.dot_general(
+        xq, w_pm1,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _xla_from_float_grouped(x_sorted, w_stack, group_sizes, k_true):
+    """Ragged-dot lowering of the grouped GEMM: packed words unpack
+    in-graph, then ``lax.ragged_dot`` — the shape the dry-run cost model
+    understands (no per-expert bucketing materialised)."""
+    e, n, _ = w_stack.shape
+    w_pm1 = bitpack.unpack_sign(w_stack, k_true, jnp.bfloat16)  # (E, N, K)
+    w_ekn = jnp.transpose(w_pm1, (0, 2, 1))  # (E, K, N)
+    xq = jnp.where(x_sorted >= 0, 1.0, -1.0).astype(jnp.bfloat16)
+    return jax.lax.ragged_dot(xq, w_ekn, group_sizes).astype(jnp.float32)
+
+
+register_backend(Backend("vpu", _vpu_gemm, gemm_grouped=_vpu_gemm_grouped))
+register_backend(Backend("mxu", _mxu_gemm, gemm_grouped=_mxu_gemm_grouped))
+register_backend(
+    Backend(
+        "xla",
+        _xla_gemm,
+        from_float=_xla_from_float,
+        from_float_grouped=_xla_from_float_grouped,
+    )
+)
+
+
+# ---------------------------------------------------------------------------
+# Activation packing (paper Fig. 1's "binarize input" stage)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bkw", "use_pallas",
+                                             "interpret"))
+def pack_activations(
+    x: jax.Array,
+    *,
+    bm: int = 8,
+    bkw: int = 8,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Binarize+pack (M, K) float -> (M, ceil(K/32)) uint32.
+
+    Rows are NOT padded (output keeps M); K tail bits are 0.
+    """
+    m, k = x.shape
+    kw = bitpack.packed_width(k)
+    if not use_pallas:
+        return bitpack.pack_sign(x)
+    kb = bkw * WORD_BITS
+    xp = jnp.pad(
+        x,
+        ((0, _round_up(m, bm) - m), (0, _round_up(k, kb) - k)),
+        constant_values=-1.0,  # negative pad -> bit 0
+    )
+    it = interpret if interpret is not None else _env_interpret()
+    out = pack_sign_pallas(xp, bm=bm, bkw=bkw, interpret=it)
+    return out[:m, :kw]
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k_true", "config"))
+def packed_gemm(
+    a_packed: jax.Array,  # (M, Kw) uint32
+    b_packed: jax.Array,  # (N, Kw) uint32 (weights, transposed layout)
+    *,
+    k_true: int,
+    config: GemmConfig = DEFAULT_GEMM_CONFIG,
+) -> jax.Array:
+    """Exact ±1 dot product (M, N) int32 from packed operands."""
+    be = get_backend(config.backend)
+    tiles = config.tiles(a_packed.shape[0], b_packed.shape[0],
+                         a_packed.shape[1])
+    return be.gemm(a_packed, b_packed, k_true, tiles, config._interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_true", "config", "epilogue")
+)
+def quant_gemm(
+    x: jax.Array,  # (..., K) float activations
+    w_packed: jax.Array,  # (N, Kw) uint32 packed weights
+    *,
+    k_true: int,
+    config: GemmConfig = DEFAULT_GEMM_CONFIG,
+    epilogue: EpilogueSpec = EpilogueSpec(),
+    scale: jax.Array | None = None,
+    bias: jax.Array | None = None,
+) -> jax.Array:
+    """The quantized GEMM: binarize+pack x, xnor-GEMM against packed w,
+    fused epilogue.  Returns (..., N) in ``epilogue.out_dtype`` —
+    numerically identical to ``sign(x) @ sign(W)`` plus the same epilogue
+    on the float training path (paper §2.2.2 invariant)."""
+    lead = x.shape[:-1]
+    assert x.shape[-1] == k_true, (x.shape, k_true)
+    x2 = x.reshape(-1, k_true)
+    be = get_backend(config.backend)
+    if be.from_float is not None:
+        dot = be.from_float(x2, w_packed, k_true)
+    else:
+        xp = pack_activations(x2, interpret=config._interpret)
+        tiles = config.tiles(xp.shape[0], w_packed.shape[0], xp.shape[1])
+        dot = be.gemm(xp, w_packed, k_true, tiles, config._interpret)
+    y = apply_epilogue(
+        dot.astype(jnp.float32), k_true=k_true, epilogue=epilogue,
+        scale=scale, bias=bias,
+    )
+    return y.reshape(*lead, w_packed.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantGemmCall:
+    """A fully-specified quantized GEMM: shape contract + backend config +
+    fused epilogue.  Layers build one of these and apply it; everything
+    else (packing, tiles, pad correction, epilogue order) is owned here."""
+
+    k_true: int
+    config: GemmConfig = DEFAULT_GEMM_CONFIG
+    epilogue: EpilogueSpec = EpilogueSpec()
+
+    def __call__(
+        self,
+        x: jax.Array,
+        w_packed: jax.Array,
+        *,
+        scale: jax.Array | None = None,
+        bias: jax.Array | None = None,
+    ) -> jax.Array:
+        return quant_gemm(
+            x, w_packed, k_true=self.k_true, config=self.config,
+            epilogue=self.epilogue, scale=scale, bias=bias,
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_true", "config", "expert_capacity", "out_dtype"),
+)
+def quant_gemm_grouped(
+    x_sorted: jax.Array,  # (T, K) float rows, sorted by group
+    w_stack,  # (E, N, Kw) uint32 packed expert weights, or a tuple of them
+    group_sizes: jax.Array,  # (E,) int32, sum <= T
+    *,
+    k_true: int,
+    config: GemmConfig = DEFAULT_GEMM_CONFIG,
+    expert_capacity: int | None = None,
+    out_dtype=jnp.float32,
+):
+    """Grouped (MoE expert-stacked) packed GEMM.
+
+    Row ``i`` of ``x_sorted`` is contracted against the packed weights of
+    its group (groups are contiguous: the first ``group_sizes[0]`` rows
+    belong to expert 0, …).  Rows beyond ``sum(group_sizes)`` — MoE
+    padding / non-owned rows — return zeros.  Rows overflowing a bucket
+    (``expert_capacity``, default T: no drops) are dropped (zeros) on
+    EVERY backend — the same contract as the EP capacity slack in
+    ``nn/mlp.py``.
+
+    ``w_stack`` may be a tuple of same-shape stacks (MoE up+gate): the
+    activations are binarized, packed, and bucketed ONCE and contracted
+    against each stack, returning a tuple.
+
+    Pallas backends scatter the packed words into per-expert buckets and
+    run the expert-batched xnor kernel, so only packed words cross HBM —
+    closing the 32x traffic win the old unpack-to-float expert path
+    forfeited.  The bucket layout is dense (E, capacity, Kw): with the
+    default full capacity that is E-fold overcompute versus a ragged
+    contraction, the price of exactness-by-default — production MoE
+    serving should pass the load-balance ``expert_capacity`` (ROADMAP
+    lists the capacity-factor wiring as a follow-on).
+    """
+    stacks = w_stack if isinstance(w_stack, tuple) else (w_stack,)
+    t, k = x_sorted.shape
+    e, n, _ = stacks[0].shape
+    assert k == k_true, (k, k_true)
+    be = get_backend(config.backend)
+
+    ec = expert_capacity or t
+    ends = jnp.cumsum(group_sizes)
+    starts = ends - group_sizes
+    row = jnp.arange(t, dtype=jnp.int32)
+    g = jnp.searchsorted(ends, row, side="right").astype(jnp.int32)
+    g_safe = jnp.minimum(g, e - 1)
+    pos = row - starts[g_safe]
+    valid = (g < e) & (pos < ec)
+
+    if be.from_float_grouped is not None:
+        outs = tuple(
+            jnp.where(
+                valid[:, None],
+                be.from_float_grouped(x_sorted, w, group_sizes, k_true),
+                0,
+            ).astype(out_dtype)
+            for w in stacks
+        )
+        return outs if isinstance(w_stack, tuple) else outs[0]
+
+    xp = pack_activations(x_sorted, interpret=config._interpret)
+    kw = xp.shape[1]
+    buckets = jnp.zeros((e, ec, kw), jnp.uint32)
+    buckets = buckets.at[g, pos].set(xp, mode="drop")
+
+    tiles = config.tiles(ec, n, kw)
+    outs = []
+    for w in stacks:
+        dots = be.gemm_grouped(buckets, w, k_true, tiles,
+                               config._interpret)  # (E, ec, N)
+        y = dots[g_safe, jnp.minimum(pos, ec - 1)]
+        outs.append(jnp.where(valid[:, None], y, 0).astype(out_dtype))
+    return tuple(outs) if isinstance(w_stack, tuple) else outs[0]

@@ -1,12 +1,12 @@
 """Public jit'd wrappers around the binary-GEMM kernels.
 
-``binary_dot(x, w_packed, k_true)`` is what QDense's packed serving path
-calls: x is float activations (binarized+packed on the fly, paper Fig. 1's
-"binarize input" cost), w_packed is the converter's packed weight, and the
-result is the exact ±1 dot product (matching the float training path per
-paper §2.2.2).
+Since the dispatch refactor this module is a thin compatibility surface over
+``kernels/dispatch.py`` — the single place that owns backend selection, the
+tile-size heuristic table, pad-correction arithmetic, and the fused
+epilogue.  Benchmarks and tests keep calling these names; layer code should
+use :mod:`repro.kernels.dispatch` directly.
 
-Backend selection:
+Backend selection (see the dispatch registry):
   * "vpu"  — Pallas popcount kernel (the literal paper algorithm)
   * "mxu"  — Pallas unpack-to-int8 MXU kernel (TPU-native, beyond-paper)
   * "xla"  — pure-jnp reference (oracle / fallback; also what the multi-pod
@@ -14,51 +14,20 @@ Backend selection:
              meaningful target for cost analysis)
 
 On this CPU container Pallas runs in interpret mode; on a real TPU set
-``interpret=False`` (ops read REPRO_PALLAS_INTERPRET).
+``interpret=False`` (dispatch reads REPRO_PALLAS_INTERPRET).
 """
 
 from __future__ import annotations
-
-import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import bitpack
-from repro.kernels import ref
-from repro.kernels.pack_bits import pack_sign_pallas
-from repro.kernels.xnor_gemm import (
-    xnor_dot_mxu_pallas,
-    xnor_mismatch_pallas,
-)
+from repro.kernels import dispatch
 
 WORD_BITS = bitpack.WORD_BITS
 
 
-def _interpret() -> bool:
-    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
-
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
-
-
-def _pad_rows(x: jax.Array, mult: int, value=0) -> jax.Array:
-    pad = _round_up(x.shape[0], mult) - x.shape[0]
-    if pad == 0:
-        return x
-    return jnp.pad(x, ((0, pad), (0, 0)), constant_values=value)
-
-
-def _pad_cols(x: jax.Array, mult: int, value=0) -> jax.Array:
-    pad = _round_up(x.shape[1], mult) - x.shape[1]
-    if pad == 0:
-        return x
-    return jnp.pad(x, ((0, 0), (0, pad)), constant_values=value)
-
-
-@functools.partial(jax.jit, static_argnames=("bm", "bkw", "backend"))
 def pack_activations(
     x: jax.Array, *, bm: int = 8, bkw: int = 8, backend: str = "pallas"
 ) -> jax.Array:
@@ -66,64 +35,26 @@ def pack_activations(
 
     Rows are NOT padded (output keeps M); K tail bits are 0.
     """
-    m, k = x.shape
-    kw = bitpack.packed_width(k)
-    if backend == "xla":
-        return bitpack.pack_sign(x)
-    kb = bkw * WORD_BITS
-    xp = _pad_cols(x, kb, value=-1.0)  # negative pad -> bit 0
-    xp = _pad_rows(xp, bm, value=-1.0)
-    out = pack_sign_pallas(xp, bm=bm, bkw=bkw, interpret=_interpret())
-    return out[:m, :kw]
+    return dispatch.pack_activations(
+        x, bm=bm, bkw=bkw, use_pallas=backend != "xla"
+    )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("k_true", "backend", "bm", "bn", "bkw")
-)
 def xnor_gemm(
     a_packed: jax.Array,  # (M, Kw) uint32
     b_packed: jax.Array,  # (N, Kw) uint32  (weights, transposed layout)
     *,
     k_true: int,
     backend: str = "vpu",
-    bm: int = 128,
-    bn: int = 128,
-    bkw: int = 64,
+    bm: int | None = None,
+    bn: int | None = None,
+    bkw: int | None = None,
 ) -> jax.Array:
     """Exact ±1 dot product (M, N) int32 from packed operands."""
-    if backend == "xla":
-        return ref.xnor_gemm_ref(a_packed, b_packed, k_true)
-
-    m, kw = a_packed.shape
-    n = b_packed.shape[0]
-    bm = min(bm, _round_up(m, 8))
-    bn = min(bn, _round_up(n, 8))
-    bkw = min(bkw, kw)
-    ap = _pad_cols(_pad_rows(a_packed, bm), bkw)
-    bp = _pad_cols(_pad_rows(b_packed, bn), bkw)
-
-    if backend == "vpu":
-        cw = min(8, bkw)
-        while bkw % cw:
-            cw -= 1
-        mism = xnor_mismatch_pallas(
-            ap, bp, bm=bm, bn=bn, bkw=bkw, chunk_words=cw,
-            interpret=_interpret(),
-        )[:m, :n]
-        return k_true - 2 * mism
-    if backend == "mxu":
-        padded_dot = xnor_dot_mxu_pallas(
-            ap, bp, bm=bm, bn=bn, bkw=bkw, interpret=_interpret()
-        )[:m, :n]
-        # pad bits (0 in both operands) unpack to (-1)*(-1) = +1 each
-        pad_bits = ap.shape[1] * WORD_BITS - k_true
-        return padded_dot - pad_bits
-    raise ValueError(f"unknown backend {backend!r}")
+    cfg = dispatch.GemmConfig(backend=backend, bm=bm, bn=bn, bkw=bkw)
+    return dispatch.packed_gemm(a_packed, b_packed, k_true=k_true, config=cfg)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("k_true", "backend", "out_dtype")
-)
 def binary_dot(
     x: jax.Array,  # (..., K) float activations
     w_packed: jax.Array,  # (N, Kw) uint32 packed weights
@@ -137,25 +68,10 @@ def binary_dot(
     Returns (..., N) in ``out_dtype`` — numerically identical to
     ``sign(x) @ sign(W)`` computed in floats (paper §2.2.2 invariant).
     """
-    lead = x.shape[:-1]
-    k = x.shape[-1]
-    assert k == k_true, (k, k_true)
-    x2 = x.reshape(-1, k)
-    if backend == "xla":
-        # XLA analog of the MXU kernel: weights stay bit-packed in HBM,
-        # unpack to ±1 in-graph and contract on the MXU with fp32
-        # accumulation (exact for ±1 up to 2^24 terms).  The popcount
-        # reference (ref.xnor_gemm_ref) stays the test oracle — its
-        # (M, N, Kw) intermediate is fine for tests but not for lowering
-        # 1M-token prefill cells.
-        w_pm1 = bitpack.unpack_sign(w_packed, k_true, jnp.bfloat16)  # (N, K)
-        xq = jnp.where(x2 >= 0, 1.0, -1.0).astype(jnp.bfloat16)
-        dot = jax.lax.dot_general(
-            xq, w_pm1,
-            dimension_numbers=(((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        return dot.astype(out_dtype).reshape(*lead, -1)
-    xp = pack_activations(x2, backend="pallas")
-    dot = xnor_gemm(xp, w_packed, k_true=k_true, backend=backend)
-    return dot.astype(out_dtype).reshape(*lead, -1)
+    return dispatch.quant_gemm(
+        x,
+        w_packed,
+        k_true=k_true,
+        config=dispatch.GemmConfig(backend=backend),
+        epilogue=dispatch.EpilogueSpec(out_dtype=out_dtype),
+    )

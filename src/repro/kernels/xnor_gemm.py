@@ -150,3 +150,110 @@ def xnor_dot_mxu_pallas(
     True dot = result - (Kw * 32 - k_true): pad bits unpack to (-1)·(-1)=+1.
     """
     return _grid_call(_mxu_kernel, a_packed, b_packed, bm, bn, bkw, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Batched (expert-stacked) variants: a leading grid axis iterates the expert
+# dimension, so one pallas_call contracts every expert's packed operands —
+# the MoE packed-serving GEMM (kernels/dispatch.py drives it).  Same inner
+# tiles as the 2D kernels; BlockSpecs carry a singleton expert block.
+# ---------------------------------------------------------------------------
+
+
+def _vpu_kernel_batched(a_ref, b_ref, out_ref, *, chunk_words: int):
+    """One (1, bm, bn) tile of one expert: popcount(xor) over this K-block."""
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bkw = a_ref.shape[-1]
+    n_chunks = bkw // chunk_words
+
+    def body(c, acc):
+        sl = pl.ds(c * chunk_words, chunk_words)
+        a = a_ref[0, :, sl]  # (bm, cw)
+        b = b_ref[0, :, sl]  # (bn, cw)
+        x = a[:, None, :] ^ b[None, :, :]  # (bm, bn, cw)
+        m = jax.lax.population_count(x).astype(jnp.int32).sum(axis=-1)
+        return acc + m
+
+    acc = jax.lax.fori_loop(
+        0, n_chunks, body, jnp.zeros(out_ref.shape[1:], jnp.int32)
+    )
+    out_ref[0, :, :] += acc
+
+
+def _mxu_kernel_batched(a_ref, b_ref, out_ref):
+    """One (1, bm, bn) tile of one expert: unpack in VMEM, MXU contraction."""
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = _unpack_pm1_i8(a_ref[0])  # (bm, bkw*32) int8
+    b = _unpack_pm1_i8(b_ref[0])  # (bn, bkw*32) int8
+    out_ref[0, :, :] += jax.lax.dot_general(
+        a,
+        b,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _grid_call_batched(kernel, a_packed, b_packed, bm, bn, bkw, interpret):
+    e, m, kw = a_packed.shape
+    e_b, n, kw_b = b_packed.shape
+    assert e == e_b and kw == kw_b, (a_packed.shape, b_packed.shape)
+    assert m % bm == 0 and n % bn == 0 and kw % bkw == 0, (
+        f"shapes must be pre-padded to block multiples: "
+        f"M={m}%{bm}, N={n}%{bn}, Kw={kw}%{bkw}"
+    )
+    grid = (e, m // bm, n // bn, kw // bkw)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bkw), lambda g, i, j, k: (g, i, k)),
+            pl.BlockSpec((1, bn, bkw), lambda g, i, j, k: (g, j, k)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, i, j, k: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, m, n), jnp.int32),
+        interpret=interpret,
+    )(a_packed, b_packed)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bkw", "chunk_words", "interpret")
+)
+def xnor_mismatch_batched_pallas(
+    a_packed: jax.Array,  # (E, M, Kw) uint32, pre-padded to block multiples
+    b_packed: jax.Array,  # (E, N, Kw) uint32
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bkw: int = DEFAULT_BKW,
+    chunk_words: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Expert-batched VPU popcount path: (E, M, N) int32 mismatch counts."""
+    kernel = functools.partial(_vpu_kernel_batched, chunk_words=chunk_words)
+    return _grid_call_batched(kernel, a_packed, b_packed, bm, bn, bkw,
+                              interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bkw", "interpret"))
+def xnor_dot_mxu_batched_pallas(
+    a_packed: jax.Array,  # (E, M, Kw) uint32
+    b_packed: jax.Array,  # (E, N, Kw) uint32
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bkw: int = DEFAULT_BKW,
+    interpret: bool = True,
+) -> jax.Array:
+    """Expert-batched MXU path: (E, M, N) int32 *padded* dots (see 2D doc)."""
+    return _grid_call_batched(_mxu_kernel_batched, a_packed, b_packed,
+                              bm, bn, bkw, interpret)

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from repro.configs.shapes import SHAPES, ShapeSpec
 from repro.core.policy import QuantPolicy
 from repro.dist.sharding import Resolver
+from repro.kernels.dispatch import GemmConfig
 from repro.launch import specs as specs_lib
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm as lm_model
@@ -123,6 +124,14 @@ def collective_bytes(hlo: str, loop_trip: int | None = None) -> dict:
 
 
 # ---------------------------------------------------------------------------
+
+
+def _cost_dict(obj) -> dict:
+    """``.cost_analysis()`` compat: older jax returns [dict], newer dict."""
+    cost = obj.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
 
 
 def _attn_flops_fwd(cfg, shape: ShapeSpec) -> float:
@@ -223,8 +232,10 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
     else:
         raise ValueError(quant)
 
-    ctx = QCtx(policy=policy, compute_dtype=jnp.bfloat16, xnor_backend="xla",
-               mesh=mesh)
+    # the "xla" backend is what the dry-run lowers: pallas_call in interpret
+    # mode is not a meaningful cost-analysis target (see kernels/dispatch)
+    ctx = QCtx(policy=policy, compute_dtype=jnp.bfloat16,
+               gemm_config=GemmConfig(backend="xla"), mesh=mesh)
     rs = Resolver(mesh)
 
     def lower_cell(scan_blocks: bool):
@@ -262,7 +273,7 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
         cycle = lm_model._cycle_len(cfg)
         loop_trip = (cfg.n_layers - cfg.first_dense_layers) // cycle
         unrolled = lower_cell(scan_blocks=False)
-        flops_global = float(unrolled.cost_analysis().get("flops", 0.0))
+        flops_global = float(_cost_dict(unrolled).get("flops", 0.0))
 
     # NOTE semantics: after SPMD partitioning both cost_analysis() and
     # memory_analysis() report PER-DEVICE numbers (shapes in the partitioned
@@ -271,7 +282,7 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
     # (pre-fusion on the CPU backend), i.e. a pessimistic upper bound on HBM
     # traffic; buffer sizes (args+temp+out) are the optimistic lower bound.
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo, loop_trip=loop_trip)
 

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.configs.shapes import SHAPES
 from repro.core.policy import QuantPolicy
 from repro.dist.sharding import Resolver
+from repro.kernels.dispatch import GemmConfig
 from repro.launch import specs as specs_lib
 from repro.launch.mesh import make_production_mesh
 from repro.models import registry
@@ -41,7 +42,8 @@ def build(arch, shape_name, quant="fp", multi_pod=False):
     policy = (QuantPolicy.full_precision() if quant == "fp"
               else QuantPolicy.binary())
     packed = policy if quant == "binary_packed" and shape.kind != "train" else None
-    ctx = QCtx(policy=policy, compute_dtype=jnp.bfloat16, xnor_backend="xla")
+    ctx = QCtx(policy=policy, compute_dtype=jnp.bfloat16,
+               gemm_config=GemmConfig(backend="xla"))
     rs = Resolver(mesh)
     cell = specs_lib.make_cell(spec, spec.config, ctx, shape,
                                packed_policy=packed, resolver=rs)
@@ -82,7 +84,6 @@ def scan_collectives(hlo: str, top: int = 25):
 
 def scan_buffers(compiled, top: int = 15):
     try:
-        import json
         stats = compiled.memory_analysis()
         print(f"args={stats.argument_size_in_bytes/2**30:.2f} "
               f"temp={stats.temp_size_in_bytes/2**30:.2f} "

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import converter
+from repro.kernels.dispatch import GemmConfig
 from repro.launch.train import parse_quant
 from repro.models import lm as lm_model
 from repro.models import registry
@@ -27,7 +28,7 @@ from repro.serve.engine import Engine, EngineConfig
 
 
 def load_packed(path: str, template):
-    from repro.ckpt.manager import _SEP, _unflatten_into
+    from repro.ckpt.manager import _unflatten_into
 
     data = np.load(path)
     flat = {k: data[k] for k in data.files}
@@ -54,7 +55,7 @@ def main() -> None:
     cfg = spec.smoke if args.smoke else spec.config
     policy = parse_quant(args.quant)
     ctx = QCtx(policy=policy, compute_dtype=jnp.float32,
-               xnor_backend=args.xnor_backend)
+               gemm_config=GemmConfig(backend=args.xnor_backend))
 
     key = jax.random.PRNGKey(args.seed)
     if spec.family == "lm":

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import qlayers
 from repro.core.policy import QuantPolicy
+from repro.kernels.dispatch import GemmConfig
 
 Params = dict[str, Any]
 
@@ -23,14 +24,31 @@ Params = dict[str, Any]
 class QCtx:
     """Carries the quantization policy + compute dtype through a model.
 
+    ``gemm_config``: how every packed GEMM executes (backend + tile
+    overrides) — threaded into ``kernels/dispatch`` by every layer.  The
+    legacy ``xnor_backend="vpu"`` string is accepted as a constructor
+    alias and folded into ``gemm_config``.
+
     ``mesh`` (optional): the physical mesh, enabling shard_map-based layers
     (MoE expert parallelism).  None on single-device runs -> pure-jnp paths.
     """
 
     policy: QuantPolicy
     compute_dtype: Any = jnp.bfloat16
-    xnor_backend: str = "vpu"
+    gemm_config: GemmConfig = GemmConfig()
     mesh: Any = None
+    xnor_backend: str | None = None  # legacy alias for gemm_config.backend
+
+    def __post_init__(self):
+        if self.xnor_backend is not None:
+            object.__setattr__(
+                self, "gemm_config",
+                dataclasses.replace(self.gemm_config,
+                                    backend=self.xnor_backend),
+            )
+            # clear the alias once folded in, so dataclasses.replace(ctx,
+            # gemm_config=...) cannot silently re-apply a stale backend
+            object.__setattr__(self, "xnor_backend", None)
 
     def dense(self, params: Params, x: jax.Array, path: str) -> jax.Array:
         return qlayers.qdense(
@@ -38,7 +56,7 @@ class QCtx:
             x,
             self.policy.spec(path),
             compute_dtype=self.compute_dtype,
-            xnor_backend=self.xnor_backend,
+            gemm_config=self.gemm_config,
         )
 
     def conv(self, params: Params, x: jax.Array, path: str, **kw) -> jax.Array:
@@ -47,7 +65,7 @@ class QCtx:
             x,
             self.policy.spec(path),
             compute_dtype=self.compute_dtype,
-            xnor_backend=self.xnor_backend,
+            gemm_config=self.gemm_config,
             **kw,
         )
 

@@ -2,10 +2,13 @@
 and MoE with shared + routed experts (deepseek-moe / qwen2-moe).
 
 MoE dispatch is sort-based ragged grouping: tokens are argsorted by expert,
-contracted with `jax.lax.ragged_dot` against the stacked expert weights, and
-scattered back with their gate weights.  The router always stays full
-precision (policy fp_patterns include "router"); expert GEMMs quantize like
-any other GEMM (see DESIGN.md §4).
+contracted against the stacked expert weights, and scattered back with
+their gate weights.  Fake-quant training contracts with
+`jax.lax.ragged_dot`; packed serving keeps the expert stacks bit-packed
+and contracts with `kernels.dispatch.quant_gemm_grouped` (the batched
+xnor kernels).  The router always stays full precision (policy
+fp_patterns include "router"); expert GEMMs quantize like any other GEMM
+(see DESIGN.md §4).
 """
 
 from __future__ import annotations
@@ -17,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import qlayers, quant
+from repro.kernels import dispatch
 from repro.nn.common import ACTIVATIONS, QCtx
 
 Params = dict[str, Any]
@@ -110,32 +114,34 @@ def _expert_quant(w, ctx: QCtx, path: str):
     )
 
 
-def _expert_weights(experts: Params, name: str, d_in: int, ctx: QCtx,
-                    path: str):
-    """Expert weight stack (E, d_in, d_out) — packed-serving aware.
+def _expert_weights(experts: Params, ctx: QCtx, path: str) -> Params:
+    """Expert weight bundle — packed-serving aware.
 
-    The converter stores experts as (E, d_out, Kw) uint32; here they are
-    unpacked in-graph to ±1 (on TPU this unpack belongs inside the GEMM
-    kernel so only packed words cross HBM — the Pallas mxu kernel shows the
-    pattern; ragged MoE fusion is listed in EXPERIMENTS §Perf).
+    Fake-quant: ``{"up"/"gate": (E, D, F), "down": (E, F, D)}`` quantized
+    stacks for ``lax.ragged_dot``.  Packed serving: the converter's
+    ``{name}_packed`` uint32 stacks ``(E, d_out, Kw)`` pass through
+    UNTOUCHED — the contraction runs on the packed xnor kernels via
+    ``dispatch.quant_gemm_grouped``, so only packed words cross HBM (the
+    32x-traffic part of the paper's insight; daBNN makes the same point).
     """
-    if name + "_packed" in experts:
-        from repro.core import bitpack
-
-        unp = bitpack.unpack_sign(
-            experts[name + "_packed"], d_in, ctx.compute_dtype
-        )  # (E, d_out, d_in)
-        return jnp.transpose(unp, (0, 2, 1))
-    return _expert_quant(experts[name], ctx, path)
+    if "up_packed" in experts:
+        return {k: v for k, v in experts.items() if k.endswith("_packed")}
+    return {
+        name: _expert_quant(experts[name], ctx, path)
+        for name in ("up", "gate", "down")
+    }
 
 
-def _moe_compute_local(xs_q, gate_w, gate_idx, up_w, gate_w_e, down_w,
-                       cfg: MoEConfig, spec, compute_dtype,
-                       e_base, e_count, capacity: int | None):
+def _moe_compute_local(xs_q, gate_w, gate_idx, ew, cfg: MoEConfig, spec,
+                       compute_dtype, gemm_config, e_base, e_count,
+                       capacity: int | None):
     """Sort-based ragged expert compute over experts [e_base, e_base+e_count).
 
     Runs either globally (single device; e_base=0, e_count=E) or per model
-    shard inside shard_map (EP).  Returns the weighted scatter-add (T, D).
+    shard inside shard_map (EP).  ``ew`` is the `_expert_weights` bundle:
+    fake-quant stacks contract with ``lax.ragged_dot``; packed stacks go
+    through the grouped packed GEMM.  Returns the weighted scatter-add
+    (T, D).
     """
     t, d = xs_q.shape
     k = gate_idx.shape[1]
@@ -155,14 +161,26 @@ def _moe_compute_local(xs_q, gate_w, gate_idx, up_w, gate_w_e, down_w,
           - jnp.clip(cum - gs_full, 0, cap)).astype(jnp.int32)
 
     act = ACTIVATIONS[cfg.act]
-    hu = jax.lax.ragged_dot(xs, up_w, gs)
-    hg = jax.lax.ragged_dot(xs, gate_w_e, gs)
-    h = act(hg) * hu
-    if not spec.is_fp:
-        h = quant.quantize_act(h.astype(jnp.float32), spec.a_bits).astype(
-            compute_dtype
-        )
-    ye = jax.lax.ragged_dot(h, down_w, gs)  # (cap, D)
+    if "up_packed" in ew:
+        # packed serving: rows stay sorted, weights stay bit-packed; the
+        # dispatch layer buckets rows per expert and runs the batched
+        # xnor kernel (or lowers to ragged_dot on the "xla" backend)
+        hu, hg = dispatch.quant_gemm_grouped(
+            xs.astype(jnp.float32), (ew["up_packed"], ew["gate_packed"]),
+            gs, k_true=d, config=gemm_config, out_dtype=jnp.float32)
+        h = act(hg) * hu
+        ye = dispatch.quant_gemm_grouped(
+            h, ew["down_packed"], gs, k_true=cfg.d_expert,
+            config=gemm_config, out_dtype=compute_dtype)
+    else:
+        hu = jax.lax.ragged_dot(xs, ew["up"], gs)
+        hg = jax.lax.ragged_dot(xs, ew["gate"], gs)
+        h = act(hg) * hu
+        if not spec.is_fp:
+            h = quant.quantize_act(h.astype(jnp.float32), spec.a_bits).astype(
+                compute_dtype
+            )
+        ye = jax.lax.ragged_dot(h, ew["down"], gs)  # (cap, D)
 
     w_sel = gate_w.reshape(-1)[sel]
     w_sel = jnp.where(owned[sel], w_sel, 0.0).astype(ye.dtype)
@@ -197,11 +215,7 @@ def moe_apply(
         else x2
     ).astype(ctx.compute_dtype)
 
-    ex = params["experts"]
-    up_w = _expert_weights(ex, "up", d, ctx, f"{path}/experts")
-    gate_w_e = _expert_weights(ex, "gate", d, ctx, f"{path}/experts")
-    down_w = _expert_weights(ex, "down", cfg.d_expert, ctx,
-                             f"{path}/experts")
+    ew = _expert_weights(params["experts"], ctx, f"{path}/experts")
 
     mesh = ctx.mesh
     use_ep = (
@@ -210,8 +224,9 @@ def moe_apply(
         and cfg.e % dict(mesh.shape)["model"] == 0
     )
     if not use_ep:
-        y = _moe_compute_local(a_q, gate_w, gate_idx, up_w, gate_w_e, down_w,
-                               cfg, spec, ctx.compute_dtype, 0, cfg.e, None)
+        y = _moe_compute_local(a_q, gate_w, gate_idx, ew, cfg, spec,
+                               ctx.compute_dtype, ctx.gemm_config,
+                               0, cfg.e, None)
     else:
         from jax.sharding import PartitionSpec as P
 
@@ -225,21 +240,22 @@ def moe_apply(
         # 2x load-balance slack over the balanced share (capacity drop)
         cap = min(max(2 * t_loc * cfg.top_k // msize, 64), t_loc * cfg.top_k)
 
-        def local(xq, gw, gi, up, gt, dn):
+        def local(xq, gw, gi, ew_loc):
             mi = jax.lax.axis_index("model")
             y_part = _moe_compute_local(
-                xq, gw, gi, up, gt, dn, cfg, spec, ctx.compute_dtype,
-                mi * e_loc, e_loc, cap)
+                xq, gw, gi, ew_loc, cfg, spec, ctx.compute_dtype,
+                ctx.gemm_config, mi * e_loc, e_loc, cap)
             return jax.lax.psum(y_part, "model")
 
         dspec = P(dp if dp else None)
-        y = jax.shard_map(
+        from repro.compat import shard_map
+
+        y = shard_map(
             local, mesh=mesh,
-            in_specs=(dspec, dspec, dspec, P("model"), P("model"),
-                      P("model")),
+            in_specs=(dspec, dspec, dspec, P("model")),
             out_specs=dspec,
             check_vma=False,
-        )(a_q, gate_w, gate_idx, up_w, gate_w_e, down_w)
+        )(a_q, gate_w, gate_idx, ew)
 
     # ---- shared experts + aux loss ---------------------------------------
     if "shared" in params:

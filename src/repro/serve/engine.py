@@ -1,20 +1,23 @@
-"""Serving engine: batched prefill + decode with continuous batching.
+"""Serving engine: batched prefill + fixed-batch greedy/sampled decode.
 
 The engine keeps one fixed-capacity KV cache; per-slot positions allow
 sequences of different lengths in the same batch (``pos`` is per-batch in
-attn_decode).  Slots are recycled when a sequence finishes — the standard
-continuous-batching loop, host-driven, with the device steps jitted once.
+attn_decode).  ``Engine.generate`` is a fixed-batch loop: every sequence
+decodes for ``max_new_tokens`` steps and slots are NOT recycled when a
+sequence finishes early — true continuous batching (slot recycling off the
+per-slot positions) is future work; the per-batch ``pos`` plumbing it
+needs is already in place.
 
-``packed=True`` serves the BMXNet-converted checkpoint: binary weights stay
-bit-packed in HBM (32x smaller) and every quantized GEMM runs through the
-xnor kernel path — this is the paper's deployment mode and the decode
-memory-roofline win analysed in EXPERIMENTS.md.
+Serving a BMXNet-converted checkpoint (packed params) is the paper's
+deployment mode: binary weights stay bit-packed in HBM (32x smaller) and
+every quantized GEMM runs through ``kernels/dispatch`` — backend and tile
+choice follow the ``QCtx.gemm_config`` threaded into every layer — the
+decode memory-roofline win analysed in EXPERIMENTS.md.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -22,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.common import ArchSpec
+from repro.kernels.dispatch import GemmConfig
 from repro.models import lm as lm_model
 from repro.models import whisper as whisper_model
 from repro.nn.common import QCtx
@@ -35,11 +39,16 @@ class EngineConfig:
     cache_len: int
     max_new_tokens: int = 32
     temperature: float = 0.0  # 0 = greedy
+    # per-engine override of how quantized GEMMs execute (backend + tiles);
+    # None inherits the QCtx's gemm_config
+    gemm_config: GemmConfig | None = None
 
 
 class Engine:
     def __init__(self, spec: ArchSpec, cfg, ctx: QCtx, params: Params,
                  ecfg: EngineConfig):
+        if ecfg.gemm_config is not None:
+            ctx = dataclasses.replace(ctx, gemm_config=ecfg.gemm_config)
         self.spec, self.cfg, self.ctx, self.ecfg = spec, cfg, ctx, ecfg
         self.params = params
         fam = spec.family

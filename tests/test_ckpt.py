@@ -1,13 +1,11 @@
 """Checkpoint manager: atomicity, corruption fallback, retention, async,
 packed export."""
 
-import json
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ckpt.manager import CheckpointManager, export_packed
 from repro.core.policy import QuantPolicy

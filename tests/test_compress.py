@@ -61,7 +61,7 @@ def test_compressed_psum_shard_map():
     grads = {"w": jnp.asarray([[1.0, -2.0], [0.5, -0.5]])}
     ef = compress.ef_init(grads)
 
-    from jax import shard_map
+    from repro.compat import shard_map
 
     def f(g, e):
         return compress.compressed_psum(g, e, "pod")
@@ -76,3 +76,16 @@ def test_compressed_psum_shard_map():
     c, _ = compress.compress_leaf(grads["w"], ef["w"])
     np.testing.assert_allclose(np.asarray(summed["w"]), np.asarray(c),
                                rtol=1e-6)
+
+
+def test_compress_tuple_structured_tree():
+    """2-tuples in the gradient pytree STRUCTURE must survive compression
+    (regression: a naive is_leaf on 2-tuples mistook structure for leaf
+    pairs and dropped half the tree)."""
+    grads = ({"a": jnp.ones((4,))}, {"b": 2.0 * jnp.ones((3,))})
+    ef = compress.ef_init(grads)
+    comp, ef2 = compress.compress(grads, ef)
+    assert jax.tree.structure(comp) == jax.tree.structure(grads)
+    assert jax.tree.structure(ef2) == jax.tree.structure(grads)
+    np.testing.assert_allclose(np.asarray(comp[1]["b"]),
+                               2.0 * np.ones(3), rtol=1e-6)

@@ -1,8 +1,5 @@
 """Unit tests for dry-run mechanics that don't need 512 devices."""
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs.shapes import SHAPES
 from repro.launch.dryrun import collective_bytes, model_flops
 from repro.models import registry

@@ -1,7 +1,6 @@
 """Pallas kernels vs pure-jnp oracle: exact equality across shape/dtype
 sweeps + hypothesis-generated shapes (the per-kernel allclose deliverable)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -2,13 +2,14 @@
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import abstract_mesh
 from repro.dist.sharding import Resolver
 
 
 def _mesh(shape=(16, 16), axes=("data", "model")):
-    return AbstractMesh(shape, axes)
+    return abstract_mesh(shape, axes)
 
 
 def test_divisible_dims_shard():
@@ -96,3 +97,14 @@ def test_rwkv_state_pspec():
     rs = Resolver(_mesh())
     cache = {"S": jax.ShapeDtypeStruct((128, 64, 64, 64), jnp.float32)}
     assert rs.cache_pspecs(cache)["S"] == P("data", "model")
+
+
+def test_master_pspecs_does_not_double_log_demotions():
+    """specs.py resolves compute AND master layouts on one Resolver; each
+    real demotion must appear once in the operator-facing log."""
+    rs = Resolver(_mesh())
+    params = {"embed": {"table": jax.ShapeDtypeStruct((49155, 64),
+                                                      jnp.float32)}}
+    rs.params_pspecs(params)
+    rs.master_pspecs(params)
+    assert len(rs.demotions) == 1

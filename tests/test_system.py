@@ -13,7 +13,7 @@ from repro.ckpt.manager import CheckpointManager
 from repro.core import converter
 from repro.core.policy import QuantPolicy
 from repro.data import synthetic
-from repro.models import lm, registry
+from repro.models import registry
 from repro.nn.common import QCtx
 from repro.optim import adamw
 from repro.serve.engine import Engine, EngineConfig
