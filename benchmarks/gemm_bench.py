@@ -97,22 +97,77 @@ def conv_gemm_row(filters=64, kernel=5, channels=256, batch=200, spatial=8):
     }
 
 
-def fig1_rows():
-    """Fig 1: vary input channel size; filters=64, kernel=5, batch=200."""
+def fig1_rows(small: bool = False):
+    """Fig 1: vary input channel size; filters=64, kernel=5, batch=200.
+    ``small`` shrinks every axis for the CI bench-smoke job."""
+    if small:
+        for ch in (16, 32):
+            yield {"sweep": "channels", "value": ch,
+                   **conv_gemm_row(filters=16, kernel=3, channels=ch,
+                                   batch=16, spatial=2)}
+        return
     for ch in (64, 128, 256, 512):
         yield {"sweep": "channels", "value": ch,
                **conv_gemm_row(channels=ch, spatial=4)}
 
 
-def fig2_rows():
+def fig2_rows(small: bool = False):
     """Fig 2: vary filter number; channels=256, kernel=5, batch=200."""
-    for f in (16, 32, 64, 128):
+    for f in (8, 16) if small else (16, 32, 64, 128):
         yield {"sweep": "filters", "value": f,
-               **conv_gemm_row(filters=f, spatial=4)}
+               **(conv_gemm_row(filters=f, kernel=3, channels=32, batch=16,
+                                spatial=2) if small
+                  else conv_gemm_row(filters=f, spatial=4))}
 
 
-def fig3_rows():
+def fig3_rows(small: bool = False):
     """Fig 3: vary kernel size; channels=256, batch=200, filters=64."""
-    for ks in (1, 3, 5, 7):
+    for ks in (1, 3) if small else (1, 3, 5, 7):
         yield {"sweep": "kernel", "value": ks,
-               **conv_gemm_row(kernel=ks, spatial=4)}
+               **(conv_gemm_row(filters=16, kernel=ks, channels=32,
+                                batch=16, spatial=2) if small
+                  else conv_gemm_row(kernel=ks, spatial=4))}
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: the k-bit (DoReFa) sweep — how the bit-plane popcount GEMM
+# scales with bit width.  Work grows as ka*kb plane pairs while packed HBM
+# bytes grow as k/32 of fp32; the sweep reports both so the roofline can
+# place w2/w4/w8 serving between the 1-bit xnor path and dense f32.
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _plane_gemm(ap, wp):
+    return ref.kbit_gemm_ref(ap, wp)
+
+
+def kbit_rows(small: bool = False):
+    """Sweep bit width k over a fixed conv-mapped GEMM (jnp/XLA reference
+    path, like the fig1-3 rows; the Pallas plane kernel is correctness-
+    checked in the equiv table)."""
+    from repro.core import quant
+
+    m, k, n = (32, 288, 16) if small else (128, 2304, 64)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    t_dense = _time(_dense, a, w)
+    for bits in (1, 2, 4, 8):
+        if bits == 1:
+            ap = bitpack.pack_sign(a)
+            wp = bitpack.pack_sign(w.T)
+            t_packed = _time(_xnor_packed, ap, wp, k)
+        else:
+            ap = bitpack.pack_planes(quant.act_codes(a, bits), bits)
+            wp = bitpack.pack_planes(quant.weight_codes(w.T, bits), bits)
+            t_packed = _time(_plane_gemm, ap, wp)
+        yield {
+            "bits": bits, "M": m, "N": n, "K": k,
+            "plane_pairs": bits * bits,
+            "dense_f32_us": t_dense,
+            "packed_gemm_us": t_packed,
+            "us_per_plane_pair": t_packed / (bits * bits),
+            "packed_bytes_frac_of_f32": bits / 32,
+            "speedup_vs_dense": t_dense / t_packed,
+        }

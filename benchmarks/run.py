@@ -1,21 +1,52 @@
 """Benchmark harness — one section per paper table/figure.
 
 Prints CSV rows ``table,name,us_per_call,derived`` (plus per-table columns)
-and, with --json, dumps everything to benchmarks/results.json.
+and, with --json, dumps everything to the given path with a ``_meta``
+provenance block (commit sha, jax version, XLA backend, timestamp) so
+BENCH files are comparable across PRs.
 
   fig1/2/3    GEMM method timing sweeps (channels / filters / kernel)
+  kbit        beyond-paper: DoReFa bit-width sweep of the plane-packed GEMM
   table1      model size binary vs fp (LeNet, ResNet-18)
   table2      partial binarization sizes by ResNet stage
   accuracy    Table 1/2 accuracy mechanism (synthetic data; direction only)
   lm_sizes    beyond-paper: packed-weight accounting for the assigned pool
-  equiv       §2.2.2 xnor==float timing + exactness spot check
+  equiv       §2.2.2 xnor==float + k-bit==DoReFa exactness spot check
+
+--smoke shrinks the swept shapes (the CI bench-smoke job);
+--fail-on-mismatch exits non-zero if any equivalence row disagrees with
+its oracle (the CI correctness gate).
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
+import time
+
+
+def provenance() -> dict:
+    """Stamp the environment a BENCH file was produced in."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=root, timeout=10,
+        ).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        sha = ""
+    sha = sha or os.environ.get("GITHUB_SHA", "") or "unknown"
+    import jax
+
+    return {
+        "commit": sha,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "timestamp_unix": int(time.time()),
+    }
 
 
 def _emit(table: str, rows, out):
@@ -28,25 +59,34 @@ def _emit(table: str, rows, out):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig2,fig3,table1,table2,"
+                    help="comma list: fig1,fig2,fig3,kbit,table1,table2,"
                          "accuracy,lm_sizes,equiv")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes (CI bench-smoke job)")
+    ap.add_argument("--fail-on-mismatch", action="store_true",
+                    help="exit non-zero if any equivalence row reports "
+                         "exact_match=False")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     def want(name):
         return only is None or name in only
 
-    out: dict = {}
+    out: dict = {"_meta": provenance()}
+    print(f"# meta,{','.join(f'{k}={v}' for k, v in out['_meta'].items())}",
+          flush=True)
 
-    if want("fig1") or want("fig2") or want("fig3"):
+    if want("fig1") or want("fig2") or want("fig3") or want("kbit"):
         from benchmarks import gemm_bench
         if want("fig1"):
-            _emit("fig1_channels", gemm_bench.fig1_rows(), out)
+            _emit("fig1_channels", gemm_bench.fig1_rows(args.smoke), out)
         if want("fig2"):
-            _emit("fig2_filters", gemm_bench.fig2_rows(), out)
+            _emit("fig2_filters", gemm_bench.fig2_rows(args.smoke), out)
         if want("fig3"):
-            _emit("fig3_kernel", gemm_bench.fig3_rows(), out)
+            _emit("fig3_kernel", gemm_bench.fig3_rows(args.smoke), out)
+        if want("kbit"):
+            _emit("kbit_sweep", gemm_bench.kbit_rows(args.smoke), out)
 
     if want("table1") or want("table2") or want("lm_sizes"):
         from benchmarks import size_bench
@@ -63,12 +103,26 @@ def main() -> None:
 
     if want("equiv"):
         from benchmarks import equiv_bench
-        _emit("equivalence", equiv_bench.rows(), out)
+        _emit("equivalence", equiv_bench.rows(args.smoke), out)
 
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)
         print(f"wrote {args.json}", file=sys.stderr)
+
+    if args.fail_on_mismatch:
+        rows = out.get("equivalence", [])
+        if not rows:
+            print("--fail-on-mismatch: no equivalence rows were produced "
+                  "(include 'equiv' in --only)", file=sys.stderr)
+            raise SystemExit(1)
+        bad = [r for r in rows if not r.get("exact_match", True)]
+        if bad:
+            for r in bad:
+                print(f"EQUIVALENCE MISMATCH: {r}", file=sys.stderr)
+            raise SystemExit(1)
+        print(f"equivalence gate: all {len(rows)} rows exact",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

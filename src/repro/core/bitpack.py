@@ -69,6 +69,34 @@ def unpack_sign(words: jax.Array, k_true: int, dtype=jnp.float32) -> jax.Array:
     return jnp.where(bits, jnp.ones((), dtype), -jnp.ones((), dtype))
 
 
+def pack_planes(codes: jax.Array, bits: int) -> jax.Array:
+    """Split k-bit unsigned ``codes`` (..., K) into ``bits`` bit planes and
+    pack each along the last axis: returns (bits, ..., Kw) uint32.
+
+    Plane ``i`` holds bit ``i`` of every code (LSB first), packed exactly
+    like the 1-bit operands (:func:`pack_bits`), so the k-bit GEMM kernels
+    reuse the same word layout — tail bits of the last word are 0 in every
+    plane, and AND against zero words contributes nothing (the k-bit path
+    needs no pad correction)."""
+    codes = codes.astype(WORD_DTYPE)
+    return jnp.stack(
+        [pack_bits((codes >> jnp.uint32(i)) & jnp.uint32(1))
+         for i in range(bits)],
+        axis=0,
+    )
+
+
+def unpack_planes(planes: jax.Array, k_true: int) -> jax.Array:
+    """Inverse of :func:`pack_planes`: (bits, ..., Kw) -> (..., k_true)
+    uint32 codes."""
+    bits = planes.shape[0]
+    codes = None
+    for i in range(bits):
+        b = unpack_bits(planes[i], k_true).astype(WORD_DTYPE) << jnp.uint32(i)
+        codes = b if codes is None else codes + b
+    return codes
+
+
 def packed_nbytes(shape: tuple[int, ...]) -> int:
     """Bytes used by a packed tensor whose *unpacked* shape is ``shape``.
 

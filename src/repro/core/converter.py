@@ -1,12 +1,18 @@
-"""Model converter — BMXNet §2.2.3.
+"""Model converter — BMXNet §2.2.3, extended to the DoReFa k-bit family.
 
 Walks a trained float checkpoint (a nested-dict pytree) and, for every layer
-the :class:`QuantPolicy` marks binary, replaces the float weight with its
-bit-packed form:
+the :class:`QuantPolicy` marks binary OR k-bit (2 <= w_bits, a_bits <= 8),
+replaces the float weight with its bit-packed form:
 
-* dense ``w (d_in, d_out)``      -> ``w_packed (d_out, Kw) uint32``
-* conv ``w (h, w, c_in, c_out)`` -> ``w_packed (c_out, Kw) uint32`` packed
-  along the flattened ``h*w*c_in`` patch axis (+ ``shape_hwio`` metadata)
+* 1-bit dense ``w (d_in, d_out)`` -> ``w_packed (d_out, Kw) uint32``
+* 1-bit conv ``w (h, w, c_in, c_out)`` -> ``w_packed (c_out, Kw) uint32``
+  packed along the flattened ``h*w*c_in`` patch axis (+ ``shape_hwio``)
+* k-bit dense/conv -> ``w_packed (w_bits, d_out, Kw)`` — the DoReFa weight
+  CODES (quant.weight_codes) split into bit planes (bitpack.pack_planes),
+  the layout kernels/kbit_gemm.py contracts; k/32 of the fp32 bytes
+* MoE expert stacks -> ``{name}_packed`` ``(E, d_out, Kw)`` at 1 bit,
+  ``(E, w_bits, d_out, Kw)`` at k bits (codes taken over the FULL stack,
+  matching the train path's global tanh-max normalisation)
 
 and optionally a per-output-channel ``scale`` (XNOR-Net alpha).  Everything
 else (first/last layers, norms, biases, recurrence gates) is left untouched.
@@ -25,8 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bitpack
-from repro.core.policy import QuantPolicy
+from repro.core import bitpack, quant
+from repro.core.policy import QuantPolicy, QuantSpec
 
 Pytree = Any
 
@@ -112,8 +118,7 @@ def convert(
             and not isinstance(node["w"], dict)
             and node["w"].ndim in (2, 4)
             and spec is not None
-            and spec.is_binary
-            and spec.a_bits == 1
+            and _packable(spec)
         ):
             return _pack_layer(node, path, spec, report, keep_float)
         if (
@@ -121,21 +126,49 @@ def convert(
             and not isinstance(node.get("up"), dict)
             and getattr(node.get("up"), "ndim", 0) == 3
             and spec is not None
-            and spec.is_binary
-            and spec.a_bits == 1
+            and _packable(spec)
         ):  # MoE expert stack (E, d_in, d_out): pack along d_in per expert
-            return _pack_experts(node, path, report, keep_float)
+            return _pack_experts(node, path, spec, report, keep_float)
         return {k: rec(v, f"{path}/{k}" if path else k) for k, v in node.items()}
 
     return rec(params, ""), report
 
 
-def _pack_experts(node, path, report: SizeReport, keep_float: bool):
+def _packable(spec: QuantSpec) -> bool:
+    """Does a packed serving layout exist for this spec?  1-bit (xnor) or
+    the plane-packed DoReFa family (both widths in 2..8; wider stays
+    fake-quantized — plane stacks above 8 planes stop paying for
+    themselves)."""
+    if spec.is_binary and spec.a_bits == 1:
+        return True
+    return 2 <= spec.w_bits <= 8 and 2 <= spec.a_bits <= 8
+
+
+def _pack_flat(flat, spec: QuantSpec):
+    """(d_out, K) float -> packed words: sign bits at 1 bit, a
+    (w_bits, d_out, Kw) plane stack of DoReFa weight codes at k bits."""
+    if spec.is_binary:
+        return bitpack.pack_sign(flat)
+    return bitpack.pack_planes(quant.weight_codes(flat, spec.w_bits),
+                               spec.w_bits)
+
+
+def _pack_experts(node, path, spec: QuantSpec, report: SizeReport,
+                  keep_float: bool):
     out = {}
     for name, w in node.items():  # up / gate / down, each (E, d_in, d_out)
         e, d_in, d_out = w.shape
         flat = jnp.transpose(jnp.asarray(w), (0, 2, 1))  # (E, d_out, d_in)
-        w_packed = bitpack.pack_sign(flat)  # (E, d_out, Kw)
+        if spec.is_binary:
+            w_packed = bitpack.pack_sign(flat)  # (E, d_out, Kw)
+        else:
+            # codes over the FULL stack: quantize_weight normalises by the
+            # global tanh-max, so per-expert packing would drift from the
+            # train path
+            codes = quant.weight_codes(flat, spec.w_bits)
+            w_packed = jnp.moveaxis(
+                bitpack.pack_planes(codes, spec.w_bits), 0, 1
+            )  # (E, w_bits, d_out, Kw)
         out[name + "_packed"] = w_packed
         if keep_float:
             out[name] = w
@@ -158,7 +191,7 @@ def _pack_layer(node, path, spec, report: SizeReport, keep_float: bool):
         meta = {"shape_hwio": np.array([h, ww, c_in, c_out])}
         alpha_axes = (0, 1, 2)
 
-    w_packed = bitpack.pack_sign(jnp.asarray(flat))
+    w_packed = _pack_flat(jnp.asarray(flat, jnp.float32), spec)
     out = dict(meta)
     out["w_packed"] = w_packed
     if spec.scale:
@@ -201,8 +234,7 @@ def abstract_packed(params: Pytree, policy: QuantPolicy) -> Pytree:
             and not isinstance(node["w"], dict)
             and len(node["w"].shape) in (2, 4)
             and spec is not None
-            and spec.is_binary
-            and spec.a_bits == 1
+            and _packable(spec)
         ):
             w = node["w"]
             if len(w.shape) == 2:
@@ -213,9 +245,10 @@ def abstract_packed(params: Pytree, policy: QuantPolicy) -> Pytree:
                 d_in = h * ww * c_in
                 meta = {"shape_hwio": jax.ShapeDtypeStruct((4,), _jnp.int64)}
             out = dict(meta)
-            out["w_packed"] = jax.ShapeDtypeStruct(
-                (d_out, bitpack.packed_width(d_in)), _jnp.uint32
-            )
+            kw = bitpack.packed_width(d_in)
+            shape = ((d_out, kw) if spec.is_binary
+                     else (spec.w_bits, d_out, kw))
+            out["w_packed"] = jax.ShapeDtypeStruct(shape, _jnp.uint32)
             if spec.scale:
                 out["scale"] = jax.ShapeDtypeStruct((d_out,), _jnp.float32)
             if "b" in node:
@@ -226,14 +259,16 @@ def abstract_packed(params: Pytree, policy: QuantPolicy) -> Pytree:
             and not isinstance(node.get("up"), dict)
             and len(getattr(node.get("up"), "shape", ())) == 3
             and spec is not None
-            and spec.is_binary
-            and spec.a_bits == 1
+            and _packable(spec)
         ):
             out = {}
             for name, w in node.items():
                 e, d_in, d_out = w.shape
+                kw = bitpack.packed_width(d_in)
+                shape = ((e, d_out, kw) if spec.is_binary
+                         else (e, spec.w_bits, d_out, kw))
                 out[name + "_packed"] = jax.ShapeDtypeStruct(
-                    (e, d_out, bitpack.packed_width(d_in)), _jnp.uint32
+                    shape, _jnp.uint32
                 )
             return out
         return {k: rec(v, f"{path}/{k}" if path else k) for k, v in node.items()}

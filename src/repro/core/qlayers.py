@@ -7,9 +7,12 @@ Two execution paths per layer, switched by what the params pytree contains:
   quantized with STE and the contraction runs on the MXU in ``compute_dtype``
   — the paper's GPU-training path (§2.2.2), bit-exact with the packed path.
 * **packed serving** (params have ``w_packed``): weights are stored as uint32
-  words (32 per word, paper §2.2.3); the contraction goes through
-  ``kernels/dispatch.quant_gemm`` — the single dispatch layer that owns
-  activation packing, backend/tile selection and pad correction.
+  words (32 per word, paper §2.2.3) — flat ``(d_out, Kw)`` sign bits at
+  1 bit, a ``(w_bits, d_out, Kw)`` DoReFa bit-plane stack at 2..8 bits —
+  and the contraction goes through ``kernels/dispatch.quant_gemm`` — the
+  single dispatch layer that owns activation packing, backend/tile
+  selection and pad correction.  The layer's :class:`QuantSpec` carries
+  the bit widths, so w4a4 / w8a8 serving needs no layer-level switches.
 
 Both paths share ONE epilogue (scale / Eq. 2 range map / bias / cast): the
 layer builds an :class:`~repro.kernels.dispatch.EpilogueSpec` from its
@@ -106,13 +109,27 @@ def qdense(
                                    scale=scale_op, bias=bias)
 
 
+def _packed_bits(params: Params, spec: QuantSpec) -> tuple[int, int]:
+    """Bit widths of a packed layer, validated against its plane layout:
+    1-bit layers store flat (d_out, Kw) words, k-bit layers store a
+    (w_bits, d_out, Kw) plane stack (converter layouts)."""
+    wp = params["w_packed"]
+    if spec.is_binary and spec.a_bits == 1:
+        assert wp.ndim == 2, ("1-bit packed weights must be (d_out, Kw)",
+                              wp.shape)
+        return 1, 1
+    assert wp.ndim == 3 and wp.shape[0] == spec.w_bits, (
+        "k-bit packed weights must be a (w_bits, d_out, Kw) plane stack",
+        wp.shape, spec,
+    )
+    return spec.w_bits, spec.a_bits
+
+
 def _qdense_packed(
     params: Params, x: jax.Array, spec: QuantSpec, *, compute_dtype,
     config: GemmConfig
 ) -> jax.Array:
-    assert spec.is_binary and spec.a_bits == 1, (
-        "packed serving is the 1-bit path; k-bit weights stay fake-quantized"
-    )
+    w_bits, a_bits = _packed_bits(params, spec)
     k_true = x.shape[-1]
     call = dispatch.QuantGemmCall(
         k_true=k_true,
@@ -120,6 +137,8 @@ def _qdense_packed(
         epilogue=dispatch.epilogue_from_spec(
             spec, bias="b" in params, out_dtype=compute_dtype
         ),
+        w_bits=w_bits,
+        a_bits=a_bits,
     )
     return call(x.astype(jnp.float32), params["w_packed"],
                 scale=params.get("scale"), bias=params.get("b"))
@@ -241,6 +260,10 @@ def _qconv_packed(
     params, x, spec, *, stride, padding, compute_dtype, config: GemmConfig
 ):
     h, w, c_in, c_out = params["shape_hwio"]
+    w_bits, a_bits = _packed_bits(params, spec)
+    # im2col pads raw floats with -1.0: bit 0 at 1 bit, and code 0 after
+    # the k-bit clip(x, 0, 1) — both match the train path's pad exactly
+    # (binary: _pad_same_pm1; k-bit: lax.conv zero-pads the quantized xq).
     cols, (n, oh, ow) = _im2col(
         x.astype(jnp.float32), h, w, stride, padding
     )
@@ -250,6 +273,8 @@ def _qconv_packed(
         epilogue=dispatch.epilogue_from_spec(
             spec, bias=False, out_dtype=compute_dtype
         ),
+        w_bits=w_bits,
+        a_bits=a_bits,
     )
     dot = call(cols, params["w_packed"], scale=params.get("scale"))
     return dot.reshape(n, oh, ow, c_out)

@@ -49,6 +49,21 @@ def quantize_k(x: jax.Array, k: int) -> jax.Array:
     return _ste(x, jnp.round(x * n) / n)
 
 
+def _act_unit(x: jax.Array) -> jax.Array:
+    """DoReFa activation pre-transform: clip into the [0, 1] grid domain.
+    Shared by :func:`quantize_act` and :func:`act_codes` so the fake-quant
+    values and the packed integer codes cannot drift."""
+    return jnp.clip(x, 0.0, 1.0)
+
+
+def _weight_unit(w: jax.Array) -> jax.Array:
+    """DoReFa weight pre-transform: ``tanh(w)/(2 max|tanh(w)|) + 1/2`` into
+    [0, 1].  The max runs over the WHOLE tensor.  Shared by
+    :func:`quantize_weight` and :func:`weight_codes` (same no-drift rule)."""
+    t = jnp.tanh(w)
+    return t / (2.0 * jnp.max(jnp.abs(t)) + 1e-12) + 0.5
+
+
 def quantize_act(x: jax.Array, bits: int) -> jax.Array:
     """QActivation: binarize (1 bit) or DoReFa-quantize activations.
 
@@ -60,7 +75,7 @@ def quantize_act(x: jax.Array, bits: int) -> jax.Array:
         return x
     if bits == 1:
         return sign_ste(x)
-    return quantize_k(jnp.clip(x, 0.0, 1.0), bits)
+    return quantize_k(_act_unit(x), bits)
 
 
 def quantize_weight(w: jax.Array, bits: int) -> jax.Array:
@@ -74,9 +89,36 @@ def quantize_weight(w: jax.Array, bits: int) -> jax.Array:
         return w
     if bits == 1:
         return sign_ste(w)
-    t = jnp.tanh(w)
-    t = t / (2.0 * jnp.max(jnp.abs(t)) + 1e-12) + 0.5
-    return 2.0 * quantize_k(t, bits) - 1.0
+    return 2.0 * quantize_k(_weight_unit(w), bits) - 1.0
+
+
+# ---------------------------------------------------------------------------
+# Integer-code views of the DoReFa quantizers — the packed k-bit serving
+# path (kernels/kbit_gemm.py) stores bit-plane stacks of these codes.  Both
+# share the pre-transforms (_act_unit / _weight_unit) with the float
+# quantizers and round the SAME product, so the codes and the fake-quant
+# values cannot drift; tests assert quantize_act(x, k) ==
+# act_codes(x, k) / (2^k - 1) and the weight analogue.
+# ---------------------------------------------------------------------------
+
+
+def act_codes(x: jax.Array, bits: int) -> jax.Array:
+    """DoReFa activation codes: ``round(clip(x, 0, 1) * (2^bits - 1))`` as
+    uint32 in [0, 2^bits - 1].  ``quantize_act(x, bits) == codes / n``."""
+    n = float(2**bits - 1)
+    return jnp.round(_act_unit(x) * n).astype(jnp.uint32)
+
+
+def weight_codes(w: jax.Array, bits: int) -> jax.Array:
+    """DoReFa weight codes (uint32 in [0, 2^bits - 1]):
+
+        quantize_weight(w, bits) == (2 * codes - n) / n,  n = 2^bits - 1.
+
+    ``_weight_unit``'s global max runs over the WHOLE tensor, so callers
+    must pass the same tensor extent the training path quantizes (e.g. the
+    full MoE expert stack, not one expert)."""
+    n = float(2**bits - 1)
+    return jnp.round(_weight_unit(w) * n).astype(jnp.uint32)
 
 
 def weight_scale(w: jax.Array, axis: int = 0) -> jax.Array:

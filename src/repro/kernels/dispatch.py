@@ -18,17 +18,51 @@ scattered across ``core/qlayers.py``, ``kernels/ops.py`` and ``nn/mlp.py``:
    arithmetic exists; ``qlayers`` builds specs via
    :func:`epilogue_from_spec` and applies via :func:`apply_epilogue`.
 
+Backend registry (the full bit-width family the paper names in §2.1 —
+1-bit XNOR plus DoReFa k-bit; :func:`resolve_backend` maps a base name +
+the layer's weight bit width onto the entry that executes it):
+
+===========  ==================  ==========================  ================
+backend      operands            kernel                      pad correction
+===========  ==================  ==========================  ================
+``vpu``      1-bit packed words  xnor+popcount (VPU,         ``k_true - 2*
+             (M, Kw)/(N, Kw)     Listing 3)                  mismatch``
+``mxu``      1-bit packed words  unpack->int8 in VMEM, MXU   ``- (Kw*32 -
+                                 dot                         k_true)``
+``xla``      float acts + any    unpack/dequant in-graph,    none (dequant
+             packed weights      XLA dot / ragged_dot (the   path)
+                                 dry-run lowering target)
+``vpu-k2``   2-bit plane stacks  2^(i+j)-weighted AND        none (AND with
+             (2, M, Kw)          popcount planes             zero pad words)
+``vpu-k4``   4-bit plane stacks  same kernel, 16 plane       none
+             (4, M, Kw)          pairs
+``vpu-k8``   8-bit plane stacks  same kernel, 64 plane       none
+             (8, M, Kw)          pairs
+===========  ==================  ==========================  ================
+
+Other w_bits in 2..8 (w3/w5/w6/w7) convert + serve through the ``"xla"``
+dequant fallback; :func:`register_backend` can add ``vpu-k3`` etc.
+Asymmetric widths (e.g. w4a8) are supported: the plane kernel takes
+ka != kb stacks and resolution follows the WEIGHT width.
+
 Entry points:
 
 * :class:`QuantGemmCall` / :func:`quant_gemm` — (…, K) float activations
-  against (N, Kw) packed weights, epilogue fused.
-* :func:`quant_gemm_grouped` — sorted rows against an (E, N, Kw) expert
-  stack with ragged group sizes: the MoE packed-serving GEMM.  Pallas
-  backends bucket rows per expert and run the batched (expert-grid)
-  kernels so only packed words cross HBM; the ``"xla"`` backend lowers to
-  ``lax.ragged_dot`` for dry-run cost analysis.
-* :func:`packed_gemm` — packed-x-packed primitive (what ``ops.xnor_gemm``
-  wraps).
+  against packed weights ((N, Kw) 1-bit words or (w_bits, N, Kw) plane
+  stacks), epilogue fused.  ``w_bits``/``a_bits`` select the k-bit path.
+* :func:`quant_gemm_grouped` — sorted rows against an (E, N, Kw) (1-bit)
+  or (E, w_bits, N, Kw) (k-bit) expert stack with ragged group sizes: the
+  MoE packed-serving GEMM.  Pallas backends bucket rows per expert and run
+  the batched (expert-grid) kernels so only packed words cross HBM; the
+  ``"xla"`` backend lowers to ``lax.ragged_dot`` for dry-run cost analysis.
+* :func:`packed_gemm` / :func:`packed_kbit_gemm` — packed-x-packed
+  primitives (exact ±1 dot / raw weighted-plane popcount S).
+
+The k-bit fake-quant dot is recovered from the integer plane GEMM as
+``(2*S - Nw*T) / (Na*Nw)`` (see kernels/kbit_gemm.py) and then flows
+through the SAME fused epilogue as every other path — which is what keeps
+w4a4/w8a8 packed serving numerically aligned with the fake-quant train
+path (§2.2.2's argument, generalized from 1 bit to the 2..31 family).
 
 On this CPU container Pallas runs in interpret mode; on a real TPU set
 ``REPRO_PALLAS_INTERPRET=0`` (or ``GemmConfig(interpret=False)``).
@@ -47,6 +81,10 @@ import jax.numpy as jnp
 from repro.core import bitpack, quant
 from repro.core.policy import QuantSpec
 from repro.kernels import ref
+from repro.kernels.kbit_gemm import (
+    kbit_plane_gemm_batched_pallas,
+    kbit_plane_gemm_pallas,
+)
 from repro.kernels.pack_bits import pack_sign_pallas
 from repro.kernels.xnor_gemm import (
     xnor_dot_mxu_batched_pallas,
@@ -86,6 +124,12 @@ class TileConfig:
 _TILE_TABLE: dict[str, dict[str, tuple[int, ...]]] = {
     "vpu": {"rows": (8, 16, 32, 64, 128), "kw": (8, 16, 32, 64)},
     "mxu": {"rows": (8, 16, 32, 64, 128), "kw": (8, 16, 32)},
+    # k-bit plane backends stream ka+kb plane stacks per block, so the
+    # K-step shrinks as the plane count grows (VMEM per block scales with
+    # (ka + kb) * bkw words).
+    "vpu-k2": {"rows": (8, 16, 32, 64, 128), "kw": (8, 16, 32)},
+    "vpu-k4": {"rows": (8, 16, 32, 64, 128), "kw": (8, 16, 32)},
+    "vpu-k8": {"rows": (8, 16, 32, 64, 128), "kw": (8, 16)},
 }
 _DEFAULT_CHUNK_WORDS = 8
 
@@ -129,6 +173,13 @@ def select_tiles(m: int, n: int, kw: int, backend: str) -> TileConfig:
 class GemmConfig:
     """How a quantized GEMM executes: backend + optional tile overrides.
 
+    ``backend`` is a BASE name: layer calls carry the per-layer bit widths
+    (from their :class:`QuantSpec`) and :func:`resolve_backend` maps e.g.
+    ``("vpu", w_bits=4)`` onto the ``"vpu-k4"`` registry entry.  ``bits``
+    is the default bit width for direct callers (benchmarks, ops.py-style
+    wrappers) that do not thread a QuantSpec — explicit ``w_bits``/
+    ``a_bits`` arguments on the entry points take precedence.
+
     ``interpret=None`` reads REPRO_PALLAS_INTERPRET (default: interpret,
     the only mode available on this CPU container).
     """
@@ -139,9 +190,11 @@ class GemmConfig:
     bkw: int | None = None
     chunk_words: int | None = None
     interpret: bool | None = None
+    bits: int | None = None
 
-    def tiles(self, m: int, n: int, kw: int) -> TileConfig:
-        t = select_tiles(m, n, kw, self.backend)
+    def tiles(self, m: int, n: int, kw: int,
+              backend: str | None = None) -> TileConfig:
+        t = select_tiles(m, n, kw, backend or self.backend)
         bkw = self.bkw or t.bkw
         return TileConfig(
             bm=self.bm or t.bm,
@@ -219,7 +272,9 @@ def apply_epilogue(
 
 @dataclasses.dataclass(frozen=True)
 class Backend:
-    """One way to execute the packed binary GEMM.
+    """One way to execute the packed quantized GEMM.
+
+    1-bit surface (``bits == 1``):
 
     ``gemm(a_packed, b_packed, k_true, tiles, interpret) -> (M, N) int32``
     must return the EXACT ±1 dot (pad correction included).
@@ -230,6 +285,21 @@ class Backend:
     ``from_float``: optional shortcut taking raw float activations —
     backends that never materialise packed activations (the XLA
     unpack-and-MXU fallback) set it and skip the pack stage.
+
+    k-bit surface (``bits > 1`` plane backends, or the ``from_float_kbit``
+    fallbacks on ``"xla"``):
+
+    ``gemm_kbit(a_planes, b_planes, tiles, interpret) -> (M, N) int32``
+    returns the raw weighted-plane popcount S (plane counts are read off
+    the stacks' leading dims; no pad correction exists on this path).
+
+    ``gemm_kbit_grouped(buckets, w_stack, tiles, interpret)`` is the
+    (E, ka, M, Kw) x (E, kb, N, Kw) expert-batched version.
+
+    ``from_float_kbit(x2, w_planes, a_bits, w_bits, k_true)`` /
+    ``from_float_kbit_grouped(x_sorted, w_stack, group_sizes, a_bits,
+    w_bits, k_true)`` return the fake-quant DoReFa dot directly from float
+    activations (the in-graph dequant path the dry-run lowers).
     """
 
     name: str
@@ -237,6 +307,11 @@ class Backend:
     gemm_grouped: Callable | None = None
     from_float: Callable | None = None
     from_float_grouped: Callable | None = None
+    bits: int = 1
+    gemm_kbit: Callable | None = None
+    gemm_kbit_grouped: Callable | None = None
+    from_float_kbit: Callable | None = None
+    from_float_kbit_grouped: Callable | None = None
 
 
 _REGISTRY: dict[str, Backend] = {}
@@ -254,6 +329,32 @@ def get_backend(name: str) -> Backend:
             f"unknown gemm backend {name!r}; registered: "
             f"{sorted(_REGISTRY)}"
         ) from None
+
+
+def resolve_backend(name: str, w_bits: int) -> str:
+    """Map a base backend name + the layer's weight bit width onto the
+    registry entry that executes it (the paper's full 1..k family behind
+    one config knob):
+
+    * ``w_bits == 1`` — the name is used as-is (the 1-bit entries), except
+      that a plane backend down-resolves to ``"vpu"`` (plane entries have
+      no ±1 kernel, and per-layer policies mix 1-bit and k-bit layers
+      under one configured base name).
+    * an entry that already handles ``w_bits`` (a matching ``vpu-kN`` or a
+      ``from_float_kbit`` fallback like ``"xla"``) — used as-is.
+    * otherwise ``vpu-k{w_bits}`` when registered, else the ``"xla"``
+      dequant fallback (w3/w5/... stay correct, just not plane-packed).
+    """
+    if w_bits <= 1:
+        be = _REGISTRY.get(name)
+        if be is not None and be.bits > 1:
+            return "vpu"
+        return name
+    be = get_backend(name)  # unknown base names raise here, not fall back
+    if be.bits == w_bits or be.from_float_kbit is not None:
+        return name
+    kname = f"vpu-k{w_bits}"
+    return kname if kname in _REGISTRY else "xla"
 
 
 def _round_up(x: int, m: int) -> int:
@@ -357,6 +458,128 @@ def _xla_from_float_grouped(x_sorted, w_stack, group_sizes, k_true):
     return jax.lax.ragged_dot(xq, w_ekn, group_sizes).astype(jnp.float32)
 
 
+# --- k-bit plane backends: DoReFa bit-plane popcount (kbit_gemm.py) -------
+
+
+def _kbit_dequant(s, t_sum, a_bits, w_bits):
+    """Integer plane GEMM -> fake-quant DoReFa dot (fp32):
+
+        a_q = n_a/Na,  w_q = (2*n_w - Nw)/Nw
+        =>  dot = (2*S - Nw*T) / (Na*Nw)
+
+    with S the weighted-plane popcount and T the activation code row-sums.
+    The numerator stays in int32 (a prior fp32 cast of S loses bits past
+    2^24 and the subtraction is cancellation-prone); the single fp32
+    divide is the only rounding.  ``_check_kbit_accumulator`` bounds every
+    term below 2^31."""
+    na = (1 << a_bits) - 1
+    nw = (1 << w_bits) - 1
+    num = 2 * s - jnp.int32(nw) * t_sum
+    return num.astype(jnp.float32) / float(na * nw)
+
+
+def _check_kbit_widths(w_bits: int, a_bits: int) -> None:
+    """Reject width combinations the packed path has no semantics for,
+    loudly: 1-bit sign values have no unsigned plane form, so mixing a
+    1-bit side with a k-bit side would silently compute the wrong
+    quantizer (round(clip(x,0,1)) is NOT sign(x))."""
+    if w_bits > 1 and a_bits > 1:
+        if not (2 <= w_bits <= 8 and 2 <= a_bits <= 8):
+            raise ValueError(
+                f"packed k-bit GEMM supports widths 2..8, got "
+                f"w{w_bits}a{a_bits}"
+            )
+    elif w_bits > 1 or a_bits > 1:
+        raise ValueError(
+            f"mixed 1-bit/k-bit widths unsupported: w{w_bits}a{a_bits} "
+            "(use both widths 1, or both in 2..8)"
+        )
+
+
+def _check_kbit_accumulator(k_true: int, a_bits: int, w_bits: int) -> None:
+    """The plane kernels accumulate S <= K * Na * Nw in int32 (and the
+    dequant numerator 2S - Nw*T has the same bound); shapes and widths are
+    static, so an oversized contraction fails at trace time instead of
+    silently wrapping (w8a8 caps K at ~16k, w4a4 at ~4.7M).  Only the
+    integer plane arm needs this — the ``"xla"`` dequant fallback
+    contracts in fp32."""
+    bound = 2 * k_true * ((1 << a_bits) - 1) * ((1 << w_bits) - 1)
+    if bound >= 2**31:
+        raise ValueError(
+            f"k-bit GEMM overflows its int32 accumulator: K={k_true} at "
+            f"w{w_bits}a{a_bits} needs 2*K*Na*Nw = {bound} >= 2^31; split "
+            "the contraction or reduce the bit width"
+        )
+
+
+def _pad_planes(a: jax.Array, b: jax.Array, tiles: TileConfig):
+    """Pad (…, ka, M, Kw) and (…, kb, N, Kw) plane stacks up to tile
+    multiples.  Zero words AND to zero, so padding needs no correction."""
+    a = _pad_axis(_pad_axis(a, -2, tiles.bm), -1, tiles.bkw)
+    b = _pad_axis(_pad_axis(b, -2, tiles.bn), -1, tiles.bkw)
+    return a, b
+
+
+def _vpu_kbit_gemm(a_planes, b_planes, tiles, interpret):
+    m, n = a_planes.shape[1], b_planes.shape[1]
+    a_planes, b_planes = _pad_planes(a_planes, b_planes, tiles)
+    return kbit_plane_gemm_pallas(
+        a_planes, b_planes, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw,
+        chunk_words=tiles.chunk_words, interpret=interpret,
+    )[:m, :n]
+
+
+def _vpu_kbit_gemm_grouped(buckets, w_stack, tiles, interpret):
+    m, n = buckets.shape[2], w_stack.shape[2]
+    buckets, w_stack = _pad_planes(buckets, w_stack, tiles)
+    return kbit_plane_gemm_batched_pallas(
+        buckets, w_stack, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw,
+        chunk_words=tiles.chunk_words, interpret=interpret,
+    )[:, :m, :n]
+
+
+def _xla_kbit_s(a_planes, b_planes, tiles, interpret):
+    del tiles, interpret
+    return ref.kbit_gemm_ref(a_planes, b_planes)
+
+
+def _dequant_weight_planes(w_planes, k_true, w_bits):
+    """(…, kb, N, Kw) plane stack -> (…, N, K) fp32 DoReFa weight values."""
+    codes = bitpack.unpack_planes(jnp.moveaxis(w_planes, -3, 0), k_true)
+    nw = float((1 << w_bits) - 1)
+    return (2.0 * codes.astype(jnp.float32) - nw) / nw
+
+
+def _xla_kbit_from_float(x2, w_planes, a_bits, w_bits, k_true):
+    """Weights stay plane-packed in HBM (k/32 of fp32 bytes), dequantized
+    to fp32 in-graph and contracted on the MXU — the k-bit analogue of
+    ``_xla_from_float`` and the shape the dry-run cost model lowers."""
+    wq = _dequant_weight_planes(w_planes, k_true, w_bits)  # (N, K)
+    xq = quant.quantize_act(x2.astype(jnp.float32), a_bits)
+    return jax.lax.dot_general(
+        xq, wq,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _xla_kbit_from_float_grouped(x_sorted, w_stack, group_sizes, a_bits,
+                                 w_bits, k_true):
+    """Ragged-dot lowering of the grouped k-bit GEMM (cf. the 1-bit
+    ``_xla_from_float_grouped``)."""
+    wq = _dequant_weight_planes(w_stack, k_true, w_bits)  # (E, N, K)
+    w_ekn = jnp.transpose(wq, (0, 2, 1))  # (E, K, N)
+    xq = quant.quantize_act(x_sorted.astype(jnp.float32), a_bits)
+    return jax.lax.ragged_dot(xq, w_ekn, group_sizes)
+
+
+def _kbit_only(*_args, **_kw):
+    raise ValueError(
+        "k-bit plane backends execute k-bit GEMMs only; call the entry "
+        "points with w_bits/a_bits (or use a 1-bit backend)"
+    )
+
+
 register_backend(Backend("vpu", _vpu_gemm, gemm_grouped=_vpu_gemm_grouped))
 register_backend(Backend("mxu", _mxu_gemm, gemm_grouped=_mxu_gemm_grouped))
 register_backend(
@@ -365,8 +588,21 @@ register_backend(
         _xla_gemm,
         from_float=_xla_from_float,
         from_float_grouped=_xla_from_float_grouped,
+        gemm_kbit=_xla_kbit_s,
+        from_float_kbit=_xla_kbit_from_float,
+        from_float_kbit_grouped=_xla_kbit_from_float_grouped,
     )
 )
+for _k in (2, 4, 8):
+    register_backend(
+        Backend(
+            f"vpu-k{_k}",
+            _kbit_only,
+            bits=_k,
+            gemm_kbit=_vpu_kbit_gemm,
+            gemm_kbit_grouped=_vpu_kbit_gemm_grouped,
+        )
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -417,55 +653,119 @@ def packed_gemm(
     config: GemmConfig = DEFAULT_GEMM_CONFIG,
 ) -> jax.Array:
     """Exact ±1 dot product (M, N) int32 from packed operands."""
-    be = get_backend(config.backend)
+    name = resolve_backend(config.backend, 1)
+    be = get_backend(name)
     tiles = config.tiles(a_packed.shape[0], b_packed.shape[0],
-                         a_packed.shape[1])
+                         a_packed.shape[1], backend=name)
     return be.gemm(a_packed, b_packed, k_true, tiles, config._interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("config",))
+def packed_kbit_gemm(
+    a_planes: jax.Array,  # (ka, M, Kw) uint32 plane stack
+    b_planes: jax.Array,  # (kb, N, Kw) uint32 plane stack (weights)
+    *,
+    config: GemmConfig = DEFAULT_GEMM_CONFIG,
+) -> jax.Array:
+    """Raw weighted-plane popcount S (M, N) int32 from packed plane stacks
+    (plane counts read off the leading dims)."""
+    name = resolve_backend(config.backend, b_planes.shape[0])
+    be = get_backend(name)
+    if be.gemm_kbit is None:
+        raise ValueError(f"backend {name!r} has no k-bit kernel")
+    _check_kbit_accumulator(a_planes.shape[2] * WORD_BITS,
+                            a_planes.shape[0], b_planes.shape[0])
+    tiles = config.tiles(a_planes.shape[1], b_planes.shape[1],
+                         a_planes.shape[2], backend=name)
+    return be.gemm_kbit(a_planes, b_planes, tiles, config._interpret)
+
+
+def _kbit_dot_from_float(x2, w_planes, *, k_true, config, w_bits, a_bits):
+    """(M, K) float acts x (w_bits, N, Kw) plane-packed weights -> the
+    fake-quant DoReFa dot (M, N) fp32, pre-epilogue."""
+    name = resolve_backend(config.backend, w_bits)
+    be = get_backend(name)
+    if be.from_float_kbit is not None:
+        return be.from_float_kbit(x2, w_planes, a_bits, w_bits, k_true)
+    assert w_planes.ndim == 3 and w_planes.shape[0] == w_bits, (
+        w_planes.shape, w_bits)
+    _check_kbit_accumulator(k_true, a_bits, w_bits)
+    codes = quant.act_codes(x2, a_bits)  # (M, K) uint32
+    a_planes = bitpack.pack_planes(codes, a_bits)  # (ka, M, Kw)
+    tiles = config.tiles(x2.shape[0], w_planes.shape[1],
+                         a_planes.shape[-1], backend=name)
+    s = be.gemm_kbit(a_planes, w_planes, tiles, config._interpret)
+    t_sum = codes.astype(jnp.int32).sum(axis=-1)  # (M,)
+    return _kbit_dequant(s, t_sum[:, None], a_bits, w_bits)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("k_true", "config", "epilogue")
+    jax.jit, static_argnames=("k_true", "config", "epilogue", "w_bits",
+                              "a_bits")
 )
 def quant_gemm(
     x: jax.Array,  # (..., K) float activations
-    w_packed: jax.Array,  # (N, Kw) uint32 packed weights
+    w_packed: jax.Array,  # (N, Kw) 1-bit words or (w_bits, N, Kw) planes
     *,
     k_true: int,
     config: GemmConfig = DEFAULT_GEMM_CONFIG,
     epilogue: EpilogueSpec = EpilogueSpec(),
     scale: jax.Array | None = None,
     bias: jax.Array | None = None,
+    w_bits: int | None = None,
+    a_bits: int | None = None,
 ) -> jax.Array:
-    """The quantized GEMM: binarize+pack x, xnor-GEMM against packed w,
+    """The quantized GEMM: quantize+pack x, packed GEMM against packed w,
     fused epilogue.  Returns (..., N) in ``epilogue.out_dtype`` —
-    numerically identical to ``sign(x) @ sign(W)`` plus the same epilogue
-    on the float training path (paper §2.2.2 invariant)."""
+    numerically identical to the fake-quant training path plus the same
+    epilogue (paper §2.2.2 invariant; ``sign(x) @ sign(W)`` at 1 bit, the
+    DoReFa Eq. 1 dot at k bits).
+
+    ``w_bits``/``a_bits`` default to ``config.bits`` then 1; widths > 1
+    route to the bit-plane backends (see :func:`resolve_backend`)."""
     lead = x.shape[:-1]
     assert x.shape[-1] == k_true, (x.shape, k_true)
     x2 = x.reshape(-1, k_true)
-    be = get_backend(config.backend)
-    if be.from_float is not None:
-        dot = be.from_float(x2, w_packed, k_true)
+    wb = w_bits or config.bits or 1
+    ab = a_bits or config.bits or 1
+    if wb > 1 or ab > 1:
+        _check_kbit_widths(wb, ab)
+    if wb > 1:
+        dot = _kbit_dot_from_float(
+            x2, w_packed, k_true=k_true, config=config, w_bits=wb,
+            a_bits=ab,
+        )
+        n_out = w_packed.shape[-2]
     else:
-        xp = pack_activations(x2, interpret=config._interpret)
-        tiles = config.tiles(xp.shape[0], w_packed.shape[0], xp.shape[1])
-        dot = be.gemm(xp, w_packed, k_true, tiles, config._interpret)
+        name = resolve_backend(config.backend, 1)
+        be = get_backend(name)
+        if be.from_float is not None:
+            dot = be.from_float(x2, w_packed, k_true)
+        else:
+            xp = pack_activations(x2, interpret=config._interpret)
+            tiles = config.tiles(xp.shape[0], w_packed.shape[0],
+                                 xp.shape[1], backend=name)
+            dot = be.gemm(xp, w_packed, k_true, tiles, config._interpret)
+        n_out = w_packed.shape[0]
     y = apply_epilogue(
         dot.astype(jnp.float32), k_true=k_true, epilogue=epilogue,
         scale=scale, bias=bias,
     )
-    return y.reshape(*lead, w_packed.shape[0])
+    return y.reshape(*lead, n_out)
 
 
 @dataclasses.dataclass(frozen=True)
 class QuantGemmCall:
-    """A fully-specified quantized GEMM: shape contract + backend config +
-    fused epilogue.  Layers build one of these and apply it; everything
-    else (packing, tiles, pad correction, epilogue order) is owned here."""
+    """A fully-specified quantized GEMM: shape contract + bit widths +
+    backend config + fused epilogue.  Layers build one of these and apply
+    it; everything else (packing, tiles, backend resolution, pad
+    correction, epilogue order) is owned here."""
 
     k_true: int
     config: GemmConfig = DEFAULT_GEMM_CONFIG
     epilogue: EpilogueSpec = EpilogueSpec()
+    w_bits: int = 1
+    a_bits: int = 1
 
     def __call__(
         self,
@@ -478,22 +778,26 @@ class QuantGemmCall:
         return quant_gemm(
             x, w_packed, k_true=self.k_true, config=self.config,
             epilogue=self.epilogue, scale=scale, bias=bias,
+            w_bits=self.w_bits, a_bits=self.a_bits,
         )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k_true", "config", "expert_capacity", "out_dtype"),
+    static_argnames=("k_true", "config", "expert_capacity", "out_dtype",
+                     "w_bits", "a_bits"),
 )
 def quant_gemm_grouped(
     x_sorted: jax.Array,  # (T, K) float rows, sorted by group
-    w_stack,  # (E, N, Kw) uint32 packed expert weights, or a tuple of them
+    w_stack,  # (E, N, Kw) / (E, w_bits, N, Kw) packed experts, or a tuple
     group_sizes: jax.Array,  # (E,) int32, sum <= T
     *,
     k_true: int,
     config: GemmConfig = DEFAULT_GEMM_CONFIG,
     expert_capacity: int | None = None,
     out_dtype=jnp.float32,
+    w_bits: int | None = None,
+    a_bits: int | None = None,
 ):
     """Grouped (MoE expert-stacked) packed GEMM.
 
@@ -520,9 +824,13 @@ def quant_gemm_grouped(
     """
     stacks = w_stack if isinstance(w_stack, tuple) else (w_stack,)
     t, k = x_sorted.shape
-    e, n, _ = stacks[0].shape
+    e = stacks[0].shape[0]
+    n = stacks[0].shape[-2]
     assert k == k_true, (k, k_true)
-    be = get_backend(config.backend)
+    wb = w_bits or config.bits or 1
+    ab = a_bits or config.bits or 1
+    if wb > 1 or ab > 1:
+        _check_kbit_widths(wb, ab)
 
     ec = expert_capacity or t
     ends = jnp.cumsum(group_sizes)
@@ -533,6 +841,15 @@ def quant_gemm_grouped(
     pos = row - starts[g_safe]
     valid = (g < e) & (pos < ec)
 
+    if wb > 1:
+        return _kbit_grouped(
+            x_sorted, w_stack, stacks, group_sizes, g, g_safe, pos, valid,
+            ec=ec, k_true=k_true, config=config, out_dtype=out_dtype,
+            w_bits=wb, a_bits=ab,
+        )
+
+    name = resolve_backend(config.backend, 1)
+    be = get_backend(name)
     if be.from_float_grouped is not None:
         outs = tuple(
             jnp.where(
@@ -549,11 +866,57 @@ def quant_gemm_grouped(
     buckets = jnp.zeros((e, ec, kw), jnp.uint32)
     buckets = buckets.at[g, pos].set(xp, mode="drop")
 
-    tiles = config.tiles(ec, n, kw)
+    tiles = config.tiles(ec, n, kw, backend=name)
     outs = []
     for w in stacks:
         dots = be.gemm_grouped(buckets, w, k_true, tiles,
                                config._interpret)  # (E, ec, N)
         y = dots[g_safe, jnp.minimum(pos, ec - 1)]
         outs.append(jnp.where(valid[:, None], y, 0).astype(out_dtype))
+    return tuple(outs) if isinstance(w_stack, tuple) else outs[0]
+
+
+def _kbit_grouped(x_sorted, w_stack, stacks, group_sizes, g, g_safe, pos,
+                  valid, *, ec, k_true, config, out_dtype, w_bits, a_bits):
+    """k-bit arm of :func:`quant_gemm_grouped`: activation codes are
+    quantized, plane-packed and bucketed ONCE, then each (E, w_bits, N, Kw)
+    expert plane stack contracts on the expert-batched plane kernel; the
+    ``"xla"`` fallback lowers to ``lax.ragged_dot`` over dequantized
+    weights.  Same capacity/validity contract as the 1-bit arm."""
+    e = stacks[0].shape[0]
+    n = stacks[0].shape[-2]
+    name = resolve_backend(config.backend, w_bits)
+    be = get_backend(name)
+
+    if be.from_float_kbit_grouped is not None:
+        outs = tuple(
+            jnp.where(
+                valid[:, None],
+                be.from_float_kbit_grouped(x_sorted, w, group_sizes,
+                                           a_bits, w_bits, k_true),
+                0,
+            ).astype(out_dtype)
+            for w in stacks
+        )
+        return outs if isinstance(w_stack, tuple) else outs[0]
+
+    _check_kbit_accumulator(k_true, a_bits, w_bits)
+    codes = quant.act_codes(x_sorted, a_bits)  # (T, K) uint32
+    planes = bitpack.pack_planes(codes, a_bits)  # (ka, T, Kw)
+    kw = planes.shape[-1]
+    buckets = jnp.zeros((e, ec, a_bits, kw), jnp.uint32)
+    buckets = buckets.at[g, pos].set(
+        jnp.moveaxis(planes, 0, 1), mode="drop"
+    )
+    buckets = jnp.moveaxis(buckets, 2, 1)  # (E, ka, ec, kw)
+
+    tiles = config.tiles(ec, n, kw, backend=name)
+    t_sum = codes.astype(jnp.int32).sum(axis=-1)  # (T,)
+    outs = []
+    for w in stacks:
+        s = be.gemm_kbit_grouped(buckets, w, tiles,
+                                 config._interpret)  # (E, ec, N)
+        y = s[g_safe, jnp.minimum(pos, ec - 1)]
+        dot = _kbit_dequant(y, t_sum[:, None], a_bits, w_bits)
+        outs.append(jnp.where(valid[:, None], dot, 0).astype(out_dtype))
     return tuple(outs) if isinstance(w_stack, tuple) else outs[0]

@@ -1,0 +1,187 @@
+"""k-bit packed GEMM Pallas kernels — the DoReFa (paper Eq. 1, 2..31-bit)
+serving path, executed as bit-plane popcount GEMM.
+
+A k-bit unsigned code ``n = sum_i 2^i b_i`` splits into k bit planes, each
+packed into uint32 words exactly like the 1-bit operands
+(``core/bitpack.pack_planes``).  The integer GEMM of activation codes
+``n_a`` against weight codes ``n_w`` then decomposes into per-plane-pair
+AND+popcount passes (the daBNN-style generalization of the paper's
+xnor+popcount Listing 3):
+
+    S[m, n] = sum_{i < ka, j < kb} 2^(i+j) * popcount(A_i[m] & B_j[n])
+
+``kernels/dispatch.py`` recovers the fake-quant DoReFa dot outside as
+
+    dot = (2*S - Nw*T) / (Na*Nw),   N* = 2^bits - 1,
+
+with ``T[m] = sum_k n_a[m, k]`` the activation code row-sums — because
+``a_q = n_a/Na`` and ``w_q = (2*n_w - Nw)/Nw`` (Eq. 1's activation and
+weight grids).  That single rewrite is what keeps the packed serving path
+bit-exact (to fp32 rounding) with the fake-quant train path, the same
+§2.2.2 argument the 1-bit path makes.
+
+Unlike both 1-bit kernels there is NO pad correction: tail/pad bits are 0
+in every plane of both operands and AND against a zero word contributes 0.
+
+int32 accumulator bound: ``S <= K * Na * Nw``, and the dequant numerator
+``2S - Nw*T`` doubles it — dispatch rejects ``2 * K * Na * Nw >= 2^31``
+at trace time (w8a8: K < ~16.5k; w4a4: K < ~4.7M).
+
+Both kernels tile (M, N, K) with a sequential-K innermost grid axis and the
+plane dimension carried whole in each block (ka/kb <= 8 planes: a (8, 128,
+16)-word block is 64 KiB of VMEM), the same grid pattern as xnor_gemm.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BKW = 16  # words: 16 * 32 = 512 binary values per plane per K-step
+
+
+def _plane_popcount(a_ref, b_ref, out_shape, chunk_words, a_idx=None,
+                    b_idx=None):
+    """Accumulate 2^(i+j)-weighted AND popcounts over every plane pair of
+    one K-block.  ``a_idx``/``b_idx`` prefix-index the expert dim of the
+    batched refs (None for the 2D kernel)."""
+    ka = a_ref.shape[1] if a_idx is not None else a_ref.shape[0]
+    kb = b_ref.shape[1] if b_idx is not None else b_ref.shape[0]
+    bkw = a_ref.shape[-1]
+    n_chunks = bkw // chunk_words
+
+    acc = jnp.zeros(out_shape, jnp.int32)
+    for i in range(ka):
+        for j in range(kb):
+
+            def body(c, pacc, i=i, j=j):
+                sl = pl.ds(c * chunk_words, chunk_words)
+                a = (a_ref[a_idx, i, :, sl] if a_idx is not None
+                     else a_ref[i, :, sl])  # (bm, cw)
+                b = (b_ref[b_idx, j, :, sl] if b_idx is not None
+                     else b_ref[j, :, sl])  # (bn, cw)
+                x = a[:, None, :] & b[None, :, :]  # (bm, bn, cw)
+                pc = jax.lax.population_count(x).astype(jnp.int32).sum(-1)
+                return pacc + pc
+
+            pc = jax.lax.fori_loop(
+                0, n_chunks, body, jnp.zeros(out_shape, jnp.int32)
+            )
+            acc = acc + (1 << (i + j)) * pc
+    return acc
+
+
+def _kbit_kernel(a_ref, b_ref, out_ref, *, chunk_words: int):
+    """One (bm, bn) tile: weighted plane popcounts over this K-block."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += _plane_popcount(a_ref, b_ref, out_ref.shape, chunk_words)
+
+
+def _grid_call(kernel, a_planes, b_planes, bm, bn, bkw, interpret):
+    ka, m, kw = a_planes.shape
+    kb, n, kw_b = b_planes.shape
+    assert kw == kw_b, (kw, kw_b)
+    assert m % bm == 0 and n % bn == 0 and kw % bkw == 0, (
+        f"shapes must be pre-padded to block multiples: "
+        f"M={m}%{bm}, N={n}%{bn}, Kw={kw}%{bkw}"
+    )
+    grid = (m // bm, n // bn, kw // bkw)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ka, bm, bkw), lambda i, j, k: (0, i, k)),
+            pl.BlockSpec((kb, bn, bkw), lambda i, j, k: (0, j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(a_planes, b_planes)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bkw", "chunk_words", "interpret")
+)
+def kbit_plane_gemm_pallas(
+    a_planes: jax.Array,  # (ka, M, Kw) uint32, M % bm == 0, Kw % bkw == 0
+    b_planes: jax.Array,  # (kb, N, Kw) uint32, N % bn == 0
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bkw: int = DEFAULT_BKW,
+    chunk_words: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Weighted bit-plane AND popcount GEMM: returns S (M, N) int32."""
+    kernel = functools.partial(_kbit_kernel, chunk_words=chunk_words)
+    return _grid_call(kernel, a_planes, b_planes, bm, bn, bkw, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Batched (expert-stacked) variant — the MoE grouped k-bit GEMM: a leading
+# grid axis iterates the expert dimension, same inner tiles.
+# ---------------------------------------------------------------------------
+
+
+def _kbit_kernel_batched(a_ref, b_ref, out_ref, *, chunk_words: int):
+    """One (1, bm, bn) tile of one expert."""
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[0, :, :] += _plane_popcount(
+        a_ref, b_ref, out_ref.shape[1:], chunk_words, a_idx=0, b_idx=0
+    )
+
+
+def _grid_call_batched(kernel, a_planes, b_planes, bm, bn, bkw, interpret):
+    e, ka, m, kw = a_planes.shape
+    e_b, kb, n, kw_b = b_planes.shape
+    assert e == e_b and kw == kw_b, (a_planes.shape, b_planes.shape)
+    assert m % bm == 0 and n % bn == 0 and kw % bkw == 0, (
+        f"shapes must be pre-padded to block multiples: "
+        f"M={m}%{bm}, N={n}%{bn}, Kw={kw}%{bkw}"
+    )
+    grid = (e, m // bm, n // bn, kw // bkw)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ka, bm, bkw), lambda g, i, j, k: (g, 0, i, k)),
+            pl.BlockSpec((1, kb, bn, bkw), lambda g, i, j, k: (g, 0, j, k)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, i, j, k: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, m, n), jnp.int32),
+        interpret=interpret,
+    )(a_planes, b_planes)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bkw", "chunk_words", "interpret")
+)
+def kbit_plane_gemm_batched_pallas(
+    a_planes: jax.Array,  # (E, ka, M, Kw) uint32, pre-padded
+    b_planes: jax.Array,  # (E, kb, N, Kw) uint32
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bkw: int = DEFAULT_BKW,
+    chunk_words: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Expert-batched weighted plane popcount: (E, M, N) int32 S."""
+    kernel = functools.partial(_kbit_kernel_batched, chunk_words=chunk_words)
+    return _grid_call_batched(kernel, a_planes, b_planes, bm, bn, bkw,
+                              interpret)

@@ -45,6 +45,36 @@ def xnor_counts_ref(a_packed, b_packed, k_true) -> jax.Array:
     return k_true - mism.astype(jnp.int32).sum(axis=-1)
 
 
+def kbit_gemm_ref(a_planes: jax.Array, b_planes: jax.Array) -> jax.Array:
+    """Weighted bit-plane AND popcount (the k-bit integer GEMM):
+
+        S[m, n] = sum_{i, j} 2^(i+j) * popcount(A_i[m] & B_j[n])
+
+    from (ka, M, Kw) x (kb, N, Kw) plane stacks (core/bitpack.pack_planes).
+    This is the oracle for kernels/kbit_gemm.py; pad/tail bits are 0 in
+    every plane so no correction term exists."""
+    ka, kb = a_planes.shape[0], b_planes.shape[0]
+    s = jnp.zeros((a_planes.shape[1], b_planes.shape[1]), jnp.int32)
+    for i in range(ka):
+        for j in range(kb):
+            x = a_planes[i][:, None, :] & b_planes[j][None, :, :]
+            pc = jax.lax.population_count(x).astype(jnp.int32).sum(axis=-1)
+            s = s + (1 << (i + j)) * pc
+    return s
+
+
+def dorefa_gemm_ref(a: jax.Array, w: jax.Array, w_bits: int,
+                    a_bits: int) -> jax.Array:
+    """Fake-quant DoReFa oracle (the train-path semantics the packed k-bit
+    serving path must reproduce): quantize both operands with the paper's
+    Eq. 1 quantizers and contract in fp32.  ``a`` is (M, K); ``w`` (K, N)."""
+    from repro.core import quant
+
+    xq = quant.quantize_act(a.astype(jnp.float32), a_bits)
+    wq = quant.quantize_weight(w.astype(jnp.float32), w_bits)
+    return xq @ wq
+
+
 def sign_gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     """Float oracle: binarize both operands with sign and matmul.
 

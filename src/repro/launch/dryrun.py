@@ -21,7 +21,8 @@ Results are written as JSON under experiments/dryrun/ and summarised in
 EXPERIMENTS.md.  Usage:
 
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
-      --shape decode_32k [--multi-pod] [--quant fp|binary|binary_packed]
+      --shape decode_32k [--multi-pod] \
+      [--quant fp|binary|wXaY, optionally suffixed _packed]
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
 """
 
@@ -35,7 +36,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.shapes import SHAPES, ShapeSpec
-from repro.core.policy import QuantPolicy
 from repro.dist.sharding import Resolver
 from repro.kernels.dispatch import GemmConfig
 from repro.launch import specs as specs_lib
@@ -222,15 +222,14 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
                 "reason": "full-attention arch; sub-quadratic required "
                           "(DESIGN.md §4)"}
 
-    if quant == "fp":
-        policy, packed = QuantPolicy.full_precision(), None
-    elif quant == "binary":
-        policy, packed = QuantPolicy.binary(), None
-    elif quant == "binary_packed":
-        policy = QuantPolicy.binary()
-        packed = policy if shape.kind != "train" else None
-    else:
-        raise ValueError(quant)
+    # "fp" | "binary" | "wXaY" (e.g. w4a4) fake-quant, with an optional
+    # "_packed" suffix to lower the packed serving layout (1-bit words or
+    # k-bit plane stacks via converter.abstract_packed)
+    from repro.launch.train import parse_quant
+
+    want_packed = quant.endswith("_packed")
+    policy = parse_quant(quant[:-len("_packed")] if want_packed else quant)
+    packed = policy if want_packed and shape.kind != "train" else None
 
     # the "xla" backend is what the dry-run lowers: pallas_call in interpret
     # mode is not a meaningful cost-analysis target (see kernels/dispatch)
@@ -374,8 +373,18 @@ def main() -> None:
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--quant", default="fp",
-                    choices=["fp", "binary", "binary_packed"])
+    def quant_arg(s: str) -> str:
+        from repro.launch.train import parse_quant
+        try:  # validate at parse time (run_cell re-parses)
+            parse_quant(s[:-len("_packed")] if s.endswith("_packed") else s)
+        except ValueError as e:
+            raise argparse.ArgumentTypeError(str(e)) from None
+        return s
+
+    ap.add_argument("--quant", default="fp", type=quant_arg,
+                    help="fp | binary[_scaled] | wXaY (e.g. w4a4), with "
+                         "optional _packed suffix for the packed serving "
+                         "layout (e.g. binary_packed, w4a4_packed)")
     ap.add_argument("--seq-parallel", action="store_true",
                     help="Megatron-SP residual sharding (train cells)")
     ap.add_argument("--microbatch", type=int, default=None,

@@ -6,7 +6,11 @@ Example:
       --steps 50 --quant binary --export-packed /tmp/g.packed.npz
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
       --quant binary --packed /tmp/g.packed.npz --prompts 4 --new-tokens 16
-"""
+
+k-bit (DoReFa) packed serving uses the same flow with ``--quant w4a4`` /
+``--quant w8a8``: the converter emits bit-plane stacks and the dispatch
+layer resolves ``--backend vpu`` onto the ``vpu-k4``/``vpu-k8`` plane
+kernels per layer (first/last stay fp per policy)."""
 
 from __future__ import annotations
 
@@ -42,8 +46,11 @@ def main() -> None:
     ap.add_argument("--quant", default="fp")
     ap.add_argument("--packed", default=None,
                     help="packed checkpoint from --export-packed")
-    ap.add_argument("--xnor-backend", default="vpu",
-                    choices=["vpu", "mxu", "xla"])
+    ap.add_argument("--xnor-backend", "--backend", default="vpu",
+                    choices=["vpu", "mxu", "xla",
+                             "vpu-k2", "vpu-k4", "vpu-k8"],
+                    help="base GEMM backend; k-bit layers resolve base "
+                         "names onto the vpu-k* plane kernels")
     ap.add_argument("--prompts", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)

@@ -164,14 +164,18 @@ def _moe_compute_local(xs_q, gate_w, gate_idx, ew, cfg: MoEConfig, spec,
     if "up_packed" in ew:
         # packed serving: rows stay sorted, weights stay bit-packed; the
         # dispatch layer buckets rows per expert and runs the batched
-        # xnor kernel (or lowers to ragged_dot on the "xla" backend)
+        # xnor / bit-plane kernel (or lowers to ragged_dot on the "xla"
+        # backend).  The spec's bit widths route 1-bit stacks to the xnor
+        # kernels and k-bit plane stacks to the DoReFa plane kernels.
         hu, hg = dispatch.quant_gemm_grouped(
             xs.astype(jnp.float32), (ew["up_packed"], ew["gate_packed"]),
-            gs, k_true=d, config=gemm_config, out_dtype=jnp.float32)
+            gs, k_true=d, config=gemm_config, out_dtype=jnp.float32,
+            w_bits=spec.w_bits, a_bits=spec.a_bits)
         h = act(hg) * hu
         ye = dispatch.quant_gemm_grouped(
             h, ew["down_packed"], gs, k_true=cfg.d_expert,
-            config=gemm_config, out_dtype=compute_dtype)
+            config=gemm_config, out_dtype=compute_dtype,
+            w_bits=spec.w_bits, a_bits=spec.a_bits)
     else:
         hu = jax.lax.ragged_dot(xs, ew["up"], gs)
         hg = jax.lax.ragged_dot(xs, ew["gate"], gs)

@@ -9,9 +9,11 @@ per-slot positions) is future work; the per-batch ``pos`` plumbing it
 needs is already in place.
 
 Serving a BMXNet-converted checkpoint (packed params) is the paper's
-deployment mode: binary weights stay bit-packed in HBM (32x smaller) and
-every quantized GEMM runs through ``kernels/dispatch`` — backend and tile
-choice follow the ``QCtx.gemm_config`` threaded into every layer — the
+deployment mode: quantized weights stay bit-packed in HBM — 32x smaller at
+1 bit, 32/k at k bits (DoReFa w4a4/w8a8 plane stacks) — and every
+quantized GEMM runs through ``kernels/dispatch`` — backend and tile choice
+follow the ``QCtx.gemm_config`` threaded into every layer, and each
+layer's ``QuantSpec`` bit widths pick the xnor or bit-plane kernels — the
 decode memory-roofline win analysed in EXPERIMENTS.md.
 """
 

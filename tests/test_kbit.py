@@ -1,0 +1,351 @@
+"""The k-bit (DoReFa, paper §2.1 Eq. 1) packed serving path: quantizer
+code/level properties, bit-plane packing, the plane-popcount Pallas kernel,
+dispatch backend resolution, and fake-quant == plane-packed equivalence on
+dense, conv-im2col and grouped (MoE) shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitpack, converter, qlayers, quant
+from repro.core.policy import QuantPolicy
+from repro.kernels import dispatch, ref
+from repro.kernels.dispatch import GemmConfig
+
+BITS = [2, 4, 8]
+# fake-quant train path vs integer plane path differ only by fp32 rounding
+# of the quantized values; 2e-4 absorbs it across every swept shape
+TOL = dict(rtol=1e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# quantizer levels + integer codes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", BITS)
+def test_quantize_k_level_count(k):
+    """Eq. 1 has exactly 2^k levels on [0, 1] and is idempotent."""
+    x = jnp.linspace(0.0, 1.0, 4097)
+    q = np.asarray(quant.quantize_k(x, k))
+    assert len(np.unique(q)) == 2**k
+    np.testing.assert_array_equal(
+        np.asarray(quant.quantize_k(jnp.asarray(q), k)), q
+    )
+
+
+@pytest.mark.parametrize("k", BITS)
+def test_act_codes_match_quantizer(k):
+    """quantize_act(x, k) == act_codes(x, k) / (2^k - 1), codes in range."""
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal(512) * 1.5, jnp.float32
+    )
+    codes = np.asarray(quant.act_codes(x, k))
+    assert codes.min() >= 0 and codes.max() <= 2**k - 1
+    np.testing.assert_allclose(
+        np.asarray(quant.quantize_act(x, k)),
+        codes.astype(np.float32) / (2**k - 1),
+        rtol=0, atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("k", BITS)
+def test_weight_codes_match_quantizer(k):
+    """quantize_weight(w, k) == (2*codes - n) / n."""
+    w = jnp.asarray(
+        np.random.default_rng(1).standard_normal(512) * 2, jnp.float32
+    )
+    n = 2**k - 1
+    codes = np.asarray(quant.weight_codes(w, k), np.float32)
+    np.testing.assert_allclose(
+        np.asarray(quant.quantize_weight(w, k)),
+        (2 * codes - n) / n,
+        rtol=0, atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("k", BITS)
+def test_pack_unpack_planes_roundtrip(k):
+    codes = jnp.asarray(
+        np.random.default_rng(2).integers(0, 2**k, (5, 77)), jnp.uint32
+    )
+    planes = bitpack.pack_planes(codes, k)
+    assert planes.shape == (k, 5, bitpack.packed_width(77))
+    back = bitpack.unpack_planes(planes, 77)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+# ---------------------------------------------------------------------------
+# plane kernel vs oracle + backend resolution
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ka,kb", [(2, 2), (4, 4), (8, 8), (8, 4)])
+def test_plane_kernel_matches_integer_dot(ka, kb):
+    """Pallas plane kernel == ref == the plain integer code GEMM, on an
+    odd (non-multiple) shape."""
+    rng = np.random.default_rng(3)
+    m, n, k = 13, 9, 70
+    ca = jnp.asarray(rng.integers(0, 2**ka, (m, k)), jnp.uint32)
+    cb = jnp.asarray(rng.integers(0, 2**kb, (n, k)), jnp.uint32)
+    ap, bp = bitpack.pack_planes(ca, ka), bitpack.pack_planes(cb, kb)
+    want = np.asarray(ca, np.int64) @ np.asarray(cb, np.int64).T
+    np.testing.assert_array_equal(np.asarray(ref.kbit_gemm_ref(ap, bp)),
+                                  want)
+    got = dispatch.packed_kbit_gemm(
+        ap, bp, config=GemmConfig(backend="vpu")
+    )
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_resolve_backend_rules():
+    assert dispatch.resolve_backend("vpu", 1) == "vpu"
+    assert dispatch.resolve_backend("mxu", 1) == "mxu"
+    # a plane backend asked to run a 1-bit GEMM down-resolves (per-layer
+    # policies mix 1-bit and k-bit layers under one configured base name)
+    assert dispatch.resolve_backend("vpu-k4", 1) == "vpu"
+    for base in ("vpu", "mxu"):
+        for k in BITS:
+            assert dispatch.resolve_backend(base, k) == f"vpu-k{k}"
+    assert dispatch.resolve_backend("xla", 4) == "xla"
+    assert dispatch.resolve_backend("vpu-k4", 4) == "vpu-k4"
+    # no plane backend registered for w3 -> dequant fallback
+    assert dispatch.resolve_backend("vpu", 3) == "xla"
+    # typo'd base names surface instead of silently falling back by width
+    with pytest.raises(ValueError, match="unknown gemm backend"):
+        dispatch.resolve_backend("vpux", 4)
+    # a k2 entry asked to run a 4-bit GEMM re-resolves to the right width
+    assert dispatch.resolve_backend("vpu-k2", 4) == "vpu-k4"
+
+
+# ---------------------------------------------------------------------------
+# packed k-bit GEMM == fake-quant DoReFa reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", BITS)
+@pytest.mark.parametrize("backend", ["vpu", "xla"])
+def test_quant_gemm_kbit_matches_fakequant(k, backend):
+    rng = np.random.default_rng(4)
+    m, kk, n = 9, 70, 13
+    x = jnp.asarray(rng.standard_normal((m, kk)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((kk, n)), jnp.float32)
+    wp = bitpack.pack_planes(quant.weight_codes(w.T, k), k)
+    got = dispatch.quant_gemm(
+        x, wp, k_true=kk, config=GemmConfig(backend=backend),
+        w_bits=k, a_bits=k,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.dorefa_gemm_ref(x, w, k, k)), **TOL
+    )
+
+
+def test_quant_gemm_kbit_asymmetric_w4a8():
+    rng = np.random.default_rng(5)
+    m, kk, n = 6, 100, 8
+    x = jnp.asarray(rng.standard_normal((m, kk)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((kk, n)), jnp.float32)
+    wp = bitpack.pack_planes(quant.weight_codes(w.T, 4), 4)
+    got = dispatch.quant_gemm(
+        x, wp, k_true=kk, config=GemmConfig(backend="vpu"),
+        w_bits=4, a_bits=8,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.dorefa_gemm_ref(x, w, 4, 8)), **TOL
+    )
+
+
+@pytest.mark.parametrize("k", BITS)
+def test_qdense_packed_kbit_matches_train(k):
+    """Converted dense layer, bias + scale on: packed == fake-quant."""
+    key = jax.random.PRNGKey(0)
+    p = qlayers.dense_init(key, 96, 24, bias=True)
+    x = jax.random.normal(jax.random.PRNGKey(1), (7, 96))
+    pol = QuantPolicy(w_bits=k, a_bits=k, scale=True)
+    spec = pol.spec("layers/0/up")
+    y_train = qlayers.qdense(p, x, spec, compute_dtype=jnp.float32)
+    packed, rep = converter.convert({"l": p}, pol)
+    assert rep.n_packed == 1
+    assert packed["l"]["w_packed"].shape == (k, 24, 3)
+    assert "scale" in packed["l"]
+    y_packed = qlayers.qdense(
+        packed["l"], x, spec, compute_dtype=jnp.float32,
+        gemm_config=GemmConfig(backend="vpu"),
+    )
+    np.testing.assert_allclose(np.asarray(y_train), np.asarray(y_packed),
+                               **TOL)
+
+
+@pytest.mark.parametrize("k", BITS)
+@pytest.mark.parametrize("padding,stride", [("SAME", 2), ("VALID", 1)])
+def test_qconv_packed_kbit_matches_train(k, padding, stride):
+    """Converted conv layer on conv-im2col shapes: packed == fake-quant
+    (including the SAME-padding zero-code correspondence)."""
+    key = jax.random.PRNGKey(2)
+    p = qlayers.conv_init(key, 3, 3, 8, 16)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 10, 10, 8))
+    pol = QuantPolicy.quantized(k)
+    spec = pol.spec("stage/conv")
+    y_train = qlayers.qconv(p, x, spec, stride=stride, padding=padding,
+                            compute_dtype=jnp.float32)
+    packed, _ = converter.convert({"c": p}, pol)
+    y_packed = qlayers.qconv(
+        packed["c"], x, spec, stride=stride, padding=padding,
+        compute_dtype=jnp.float32, gemm_config=GemmConfig(backend="vpu"),
+    )
+    np.testing.assert_allclose(np.asarray(y_train), np.asarray(y_packed),
+                               **TOL)
+
+
+@pytest.mark.parametrize("backend", ["vpu", "xla"])
+def test_grouped_kbit_matches_fakequant(backend):
+    """Expert-stacked (MoE) k-bit GEMM vs per-group fake-quant reference,
+    ragged group sizes with an empty group."""
+    t, kk, e, n, k = 23, 45, 4, 13, 4
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (t, kk), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (e, n, kk),
+                          jnp.float32)
+    gs = jnp.asarray([5, 0, 11, 4], jnp.int32)  # ragged, sum < t
+    # codes over the FULL stack (global tanh-max, like the train path)
+    wp = jnp.moveaxis(bitpack.pack_planes(quant.weight_codes(w, k), k),
+                      0, 1)  # (E, k, N, Kw)
+    got = np.asarray(dispatch.quant_gemm_grouped(
+        x, wp, gs, k_true=kk, config=GemmConfig(backend=backend),
+        w_bits=k, a_bits=k,
+    ))
+    xq = np.asarray(quant.quantize_act(x, k))
+    wq = np.asarray(quant.quantize_weight(w, k))
+    ends = np.cumsum(np.asarray(gs))
+    want = np.zeros((t, n), np.float32)
+    for i in range(t):
+        g = int(np.searchsorted(ends, i, side="right"))
+        if g < e:
+            want[i] = xq[i] @ wq[g].T
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_moe_packed_kbit_end_to_end():
+    """w4a4 MoE through nn/mlp.py: converted plane stacks == fake-quant."""
+    from repro.nn import mlp
+    from repro.nn.common import QCtx
+
+    cfg = mlp.MoEConfig(d_model=64, d_expert=48, n_routed=8, n_shared=1,
+                        top_k=2)
+    params = mlp.moe_init(jax.random.PRNGKey(0), cfg)
+    pol = QuantPolicy.quantized(4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 64))
+
+    y_fq, _ = mlp.moe_apply(params, x, cfg,
+                            QCtx(policy=pol, compute_dtype=jnp.float32),
+                            "layers/0/moe")
+    packed, rep = converter.convert(jax.tree.map(np.asarray, params), pol)
+    assert rep.n_packed > 0
+    packed = jax.tree.map(jnp.asarray, packed)
+    assert packed["experts"]["up_packed"].shape[1] == 4  # plane dim
+    ctx = QCtx(policy=pol, compute_dtype=jnp.float32,
+               gemm_config=GemmConfig(backend="vpu"))
+    y_pk, _ = mlp.moe_apply(packed, x, cfg, ctx, "layers/0/moe")
+    np.testing.assert_allclose(np.asarray(y_fq), np.asarray(y_pk), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# converter accounting + abstract layout
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", BITS)
+def test_converter_kbit_compression_ratio(k):
+    """Plane-packed weights store k/32 of the fp32 bytes."""
+    p = {"l": qlayers.dense_init(jax.random.PRNGKey(0), 1024, 256)}
+    _, rep = converter.convert(p, QuantPolicy.quantized(k))
+    leaf = [x for x in rep.leaves if x.packed][0]
+    assert leaf.bytes_after == leaf.bytes_fp32 * k // 32
+
+
+def test_abstract_packed_matches_convert_kbit():
+    pol = QuantPolicy.quantized(4)
+    params = {
+        "mlp": {"up": qlayers.dense_init(jax.random.PRNGKey(0), 64, 32,
+                                         bias=True)},
+        "conv": {"c": qlayers.conv_init(jax.random.PRNGKey(1), 3, 3, 4, 8)},
+        "experts": {"up": jnp.zeros((4, 64, 32)),
+                    "gate": jnp.zeros((4, 64, 32)),
+                    "down": jnp.zeros((4, 32, 64))},
+    }
+    conc, _ = converter.convert(jax.tree.map(np.asarray, params), pol)
+    abst = converter.abstract_packed(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                     params), pol)
+    assert (jax.tree.map(lambda x: tuple(x.shape), abst)
+            == jax.tree.map(lambda x: tuple(x.shape), conc))
+
+
+def test_kbit_base_backend_serves_1bit_layers():
+    """GemmConfig(backend='vpu-k4') on a 1-bit GEMM (e.g. the fp->binary
+    layers of a mixed policy) must run, not crash on the plane entry."""
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 5)), jnp.float32)
+    wp = bitpack.pack_sign(w.T)
+    got = dispatch.quant_gemm(x, wp, k_true=64,
+                              config=GemmConfig(backend="vpu-k4"))
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.sign_gemm_ref(x, w))
+    )
+
+
+def test_mixed_and_oversized_widths_rejected():
+    """Mixed 1-bit/k-bit widths and int32-overflowing contractions must
+    fail loudly (silent wrong numbers otherwise)."""
+    x = jnp.zeros((2, 64), jnp.float32)
+    wp1 = jnp.zeros((8, 2), jnp.uint32)  # 1-bit layout
+    wp4 = jnp.zeros((4, 8, 2), jnp.uint32)  # 4-bit plane stack
+    with pytest.raises(ValueError, match="mixed 1-bit/k-bit"):
+        dispatch.quant_gemm(x, wp4, k_true=64, w_bits=4)  # a_bits=1
+    with pytest.raises(ValueError, match="mixed 1-bit/k-bit"):
+        dispatch.quant_gemm(x, wp1, k_true=64, a_bits=4)  # w_bits=1
+    with pytest.raises(ValueError, match="widths 2..8"):
+        dispatch.quant_gemm(x, wp4, k_true=64, w_bits=4, a_bits=9)
+    big_k = 20_000  # w8a8 int32 bound is ~16.5k
+    xb = jnp.zeros((1, big_k), jnp.float32)
+    wb = jnp.zeros((8, 1, bitpack.packed_width(big_k)), jnp.uint32)
+    with pytest.raises(ValueError, match="int32 accumulator"):
+        dispatch.quant_gemm(xb, wb, k_true=big_k,
+                            config=GemmConfig(backend="vpu"),
+                            w_bits=8, a_bits=8)
+
+
+def test_kbit_dequant_precision_large_k():
+    """w8a8 at K=4096: S > 2^24, so the dequant numerator must stay in
+    int32 (an fp32 cast of S first loses bits before the cancellation-
+    prone subtraction)."""
+    rng = np.random.default_rng(7)
+    k = 4096
+    x = jnp.asarray(rng.random((2, k)), jnp.float32)  # dense in [0,1]
+    w = jnp.asarray(rng.standard_normal((k, 3)), jnp.float32)
+    wp = bitpack.pack_planes(quant.weight_codes(w.T, 8), 8)
+    got = np.asarray(dispatch.quant_gemm(
+        x, wp, k_true=k, config=GemmConfig(backend="vpu"),
+        w_bits=8, a_bits=8,
+    ))
+    # float64 oracle: exact integer S/T far beyond fp32 mantissa
+    ca = np.asarray(quant.act_codes(x, 8), np.int64)
+    cw = np.asarray(quant.weight_codes(w.T, 8), np.int64)
+    s = ca @ cw.T
+    t = ca.sum(-1, keepdims=True)
+    want = (2 * s - 255 * t) / float(255 * 255)
+    # residual = one fp32 cast of the int32 numerator (~2^-24 relative);
+    # casting S to fp32 BEFORE the subtraction would sit near 5e-5 here
+    np.testing.assert_allclose(got, want, rtol=0, atol=5e-6)
+
+
+def test_full_precision_and_binary_unchanged():
+    """k-bit plumbing must not disturb the fp and 1-bit convert rules."""
+    p = {"l": qlayers.dense_init(jax.random.PRNGKey(0), 64, 32)}
+    _, rep_fp = converter.convert(p, QuantPolicy.full_precision())
+    assert rep_fp.n_packed == 0
+    conv_b, rep_b = converter.convert(p, QuantPolicy.binary())
+    assert rep_b.n_packed == 1
+    assert conv_b["l"]["w_packed"].ndim == 2  # flat sign words, no planes
