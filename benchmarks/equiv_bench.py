@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -35,6 +36,28 @@ def rows(small: bool = False):
         yield {"backend": backend, "bits": 1, "M": m, "K": k, "N": n,
                "us_per_call_cold": round(dt, 1), "exact_match": exact}
 
+    # tensor-parallel: every shard-* backend must be BIT-IDENTICAL to the
+    # oracle at every split (Kw-partial int32 popcounts psum exactly; pad
+    # correction applies once on the reduced sum).  Rows appear when the
+    # process has multiple devices — CI forces 8 virtual host devices.
+    n_dev = len(jax.devices())
+    for ways in (2, 8):
+        if ways > n_dev:
+            continue
+        mesh = jax.make_mesh((ways,), ("model",))
+        for backend in ("shard-vpu", "shard-mxu"):
+            for layout in ("k", "n"):
+                cfg = GemmConfig(backend=backend, mesh=mesh,
+                                 shard_layout=layout)
+                t0 = time.perf_counter()
+                got = np.asarray(dispatch.packed_gemm(
+                    ap, wp, k_true=k, config=cfg))
+                dt = (time.perf_counter() - t0) * 1e6
+                yield {"backend": f"{backend}/{layout}x{ways}", "bits": 1,
+                       "M": m, "K": k, "N": n,
+                       "us_per_call_cold": round(dt, 1),
+                       "exact_match": bool((got == oracle).all())}
+
     # k-bit: plane-packed DoReFa GEMM vs the fake-quant oracle (allclose
     # at fp32 — the integer plane path differs from the float path only by
     # fp32 rounding of the quantized values)
@@ -46,11 +69,18 @@ def rows(small: bool = False):
             quant.weight_codes(wk.T, bits), bits
         )
         want = np.asarray(ref.dorefa_gemm_ref(ak, wk, bits, bits))
-        for backend in ("xla", f"vpu-k{bits}"):
+        backends = ("xla", f"vpu-k{bits}")
+        if bits == 4 and n_dev >= 2:  # sharded k-bit plane gate row
+            backends += (f"shard-vpu-k{bits}",)
+        for backend in backends:
+            cfg = GemmConfig(
+                backend=backend,
+                mesh=(jax.make_mesh((2,), ("model",))
+                      if backend.startswith("shard-") else None),
+            )
             t0 = time.perf_counter()
             got = np.asarray(dispatch.quant_gemm(
-                ak, wk_planes, k_true=kk,
-                config=GemmConfig(backend=backend),
+                ak, wk_planes, k_true=kk, config=cfg,
                 w_bits=bits, a_bits=bits,
             ))
             dt = (time.perf_counter() - t0) * 1e6

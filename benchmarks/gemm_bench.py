@@ -142,6 +142,74 @@ def _plane_gemm(ap, wp):
     return ref.kbit_gemm_ref(ap, wp)
 
 
+# ---------------------------------------------------------------------------
+# Beyond-paper: the tensor-parallel (shard-*) sweep — the same packed GEMM
+# partitioned across mesh devices (Kw-partial popcount + psum, or
+# N-partitioned weights).  Every row carries ``exact_match`` against the
+# single-device backend: the sharded path must be BIT-IDENTICAL, and the
+# CI equivalence gate also covers it (benchmarks/equiv_bench.py).  On this
+# host-CPU rig the timings measure collective/shard_map overhead, not TPU
+# speedup — the correctness columns are the point.
+# ---------------------------------------------------------------------------
+
+
+def shard_rows(small: bool = False):
+    """Sweep shard width (1/2/4/8-way) x backend over a fixed conv-mapped
+    GEMM.  Multi-way rows need multiple devices — CI forces 8 virtual
+    host devices via XLA_FLAGS.  In --smoke (CI gate) mode a single-device
+    process emits an explicit ``exact_match=False`` row instead of
+    silently skipping: otherwise a dropped/ignored XLA flag would turn
+    the sharded-vs-single-device gate vacuously green."""
+    from repro.kernels import dispatch
+    from repro.kernels.dispatch import GemmConfig
+
+    ndev = len(jax.devices())
+    if small and ndev < 2:
+        yield {
+            "backend": "shard-*", "layout": "-", "ways": 0, "devices": ndev,
+            "error": "smoke shard sweep needs >= 2 devices (set XLA_FLAGS="
+                     "--xla_force_host_platform_device_count=8)",
+            "exact_match": False,
+        }
+        return
+    m, k, n = (32, 288, 16) if small else (128, 2304, 64)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    ap = bitpack.pack_sign(a)
+    wp = bitpack.pack_sign(w.T)
+
+    def run(cfg):
+        return dispatch.packed_gemm(ap, wp, k_true=k, config=cfg)
+
+    single = {}
+    for inner in ("vpu", "mxu"):
+        cfg = GemmConfig(backend=inner)
+        # the correctness run doubles as the jit warm-up
+        single[inner] = (np.asarray(run(cfg)),
+                         _time(run, cfg, warmup=0, iters=2))
+
+    for ways in (1, 2, 4, 8):
+        if ways > ndev:
+            continue
+        mesh = jax.make_mesh((ways,), ("model",))
+        for inner in ("vpu", "mxu"):
+            for layout in ("k", "n"):
+                cfg = GemmConfig(backend=f"shard-{inner}", mesh=mesh,
+                                 shard_layout=layout)
+                got = np.asarray(run(cfg))  # also the jit warm-up
+                t_us = _time(run, cfg, warmup=0, iters=2)
+                want, t_single = single[inner]
+                yield {
+                    "backend": f"shard-{inner}", "layout": layout,
+                    "ways": ways, "M": m, "N": n, "K": k,
+                    "devices": ndev,
+                    "single_device_us": round(t_single, 1),
+                    "sharded_us": round(t_us, 1),
+                    "exact_match": bool((got == want).all()),
+                }
+
+
 def kbit_rows(small: bool = False):
     """Sweep bit width k over a fixed conv-mapped GEMM (jnp/XLA reference
     path, like the fig1-3 rows; the Pallas plane kernel is correctness-

@@ -7,6 +7,8 @@ BENCH files are comparable across PRs.
 
   fig1/2/3    GEMM method timing sweeps (channels / filters / kernel)
   kbit        beyond-paper: DoReFa bit-width sweep of the plane-packed GEMM
+  shard       beyond-paper: tensor-parallel (shard-*) packed GEMM sweep
+              (1/2/4/8-way; every row checks sharded == single-device)
   table1      model size binary vs fp (LeNet, ResNet-18)
   table2      partial binarization sizes by ResNet stage
   accuracy    Table 1/2 accuracy mechanism (synthetic data; direction only)
@@ -59,8 +61,8 @@ def _emit(table: str, rows, out):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig2,fig3,kbit,table1,table2,"
-                         "accuracy,lm_sizes,equiv")
+                    help="comma list: fig1,fig2,fig3,kbit,shard,table1,"
+                         "table2,accuracy,lm_sizes,equiv")
     ap.add_argument("--json", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes (CI bench-smoke job)")
@@ -77,7 +79,8 @@ def main() -> None:
     print(f"# meta,{','.join(f'{k}={v}' for k, v in out['_meta'].items())}",
           flush=True)
 
-    if want("fig1") or want("fig2") or want("fig3") or want("kbit"):
+    if (want("fig1") or want("fig2") or want("fig3") or want("kbit")
+            or want("shard")):
         from benchmarks import gemm_bench
         if want("fig1"):
             _emit("fig1_channels", gemm_bench.fig1_rows(args.smoke), out)
@@ -87,6 +90,8 @@ def main() -> None:
             _emit("fig3_kernel", gemm_bench.fig3_rows(args.smoke), out)
         if want("kbit"):
             _emit("kbit_sweep", gemm_bench.kbit_rows(args.smoke), out)
+        if want("shard"):
+            _emit("shard_sweep", gemm_bench.shard_rows(args.smoke), out)
 
     if want("table1") or want("table2") or want("lm_sizes"):
         from benchmarks import size_bench
@@ -111,10 +116,12 @@ def main() -> None:
         print(f"wrote {args.json}", file=sys.stderr)
 
     if args.fail_on_mismatch:
-        rows = out.get("equivalence", [])
+        # shard_sweep rows carry exact_match too (sharded == single-device)
+        rows = out.get("equivalence", []) + out.get("shard_sweep", [])
         if not rows:
-            print("--fail-on-mismatch: no equivalence rows were produced "
-                  "(include 'equiv' in --only)", file=sys.stderr)
+            print("--fail-on-mismatch: no gated rows were produced "
+                  "(include 'equiv' and/or 'shard' in --only)",
+                  file=sys.stderr)
             raise SystemExit(1)
         bad = [r for r in rows if not r.get("exact_match", True)]
         if bad:

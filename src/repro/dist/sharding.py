@@ -39,6 +39,90 @@ Pytree = Any
 _DP_AXES = ("pod", "data")  # batch-like axes, outermost first
 
 
+# ---------------------------------------------------------------------------
+# Tensor-parallel packed GEMM layouts (the `shard-*` dispatch backends)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPartition:
+    """Operand/result PartitionSpecs for one sharded packed GEMM, plus the
+    contraction axis the raw integer partials must ``psum`` over (None when
+    the layout needs no collective)."""
+
+    a: P
+    w: P
+    out: P
+    reduce_axis: str | None
+
+
+def packed_gemm_pspecs(
+    layout: str,
+    axis: str,
+    *,
+    expert_axis: str | None = None,
+    planes: bool = False,
+    grouped: bool = False,
+) -> GemmPartition:
+    """The two tensor-parallel layouts of the packed GEMM — the Megatron
+    pair, covering both MLP matmuls without resharding:
+
+    * ``"k"`` — the packed contraction (Kw) dimension partitions over
+      ``axis``; every shard computes a Kw-partial raw kernel output
+      (xor-mismatch count / padded MXU dot / weighted plane popcount S)
+      and the INTEGER partials ``psum`` exactly, so pad correction and the
+      fused epilogue apply once on the reduced sum (row-parallel / down
+      projection: activations arrive K-sharded from an "n"-layout up
+      projection).
+    * ``"n"`` — weights partition over their output (N) rows, activations
+      replicate, no collective (column-parallel / up+gate projection —
+      output arrives N-sharded, feeding the "k"-layout down projection).
+
+    Operand shapes: 1-bit ``a (M, Kw)`` x ``w (N, Kw)``; plane stacks
+    ``a (ka, M, Kw)`` x ``w (kb, N, Kw)``; grouped adds a leading expert
+    dim that partitions over ``expert_axis`` (expert parallelism — no
+    collective on that axis, outputs stay expert-sharded).
+    """
+    ea = expert_axis
+    if layout == "n":
+        if grouped:
+            raise ValueError(
+                "grouped packed GEMM has no 'n' layout (expert stacks "
+                "shard over expert_axis x the 'k' contraction axis)"
+            )
+        if planes:
+            return GemmPartition(
+                a=P(None, None, None), w=P(None, axis, None),
+                out=P(None, axis), reduce_axis=None,
+            )
+        return GemmPartition(
+            a=P(None, None), w=P(axis, None), out=P(None, axis),
+            reduce_axis=None,
+        )
+    if layout != "k":
+        raise ValueError(f"unknown packed-GEMM shard layout {layout!r}; "
+                         "expected 'k' or 'n'")
+    if grouped:
+        if planes:
+            return GemmPartition(
+                a=P(ea, None, None, axis), w=P(ea, None, None, axis),
+                out=P(ea, None, None), reduce_axis=axis,
+            )
+        return GemmPartition(
+            a=P(ea, None, axis), w=P(ea, None, axis),
+            out=P(ea, None, None), reduce_axis=axis,
+        )
+    if planes:
+        return GemmPartition(
+            a=P(None, None, axis), w=P(None, None, axis),
+            out=P(None, None), reduce_axis=axis,
+        )
+    return GemmPartition(
+        a=P(None, axis), w=P(None, axis), out=P(None, None),
+        reduce_axis=axis,
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class Demotion:
     path: str
@@ -169,6 +253,19 @@ class Resolver:
         if n_kv % msize == 0:
             return {}
         return {r"attn/(k|v)/(w|w_packed)$": (None, None)}
+
+    def gemm_pspecs(self, layout: str, axis: str = "model",
+                    **kw) -> GemmPartition:
+        """:func:`packed_gemm_pspecs` validated against this mesh (unknown
+        axes raise here instead of deep inside shard_map)."""
+        ea = kw.get("expert_axis")
+        for name in (axis,) + ((ea,) if ea else ()):
+            if name not in self.axis_sizes:
+                raise ValueError(
+                    f"packed-GEMM shard axis {name!r} not on mesh axes "
+                    f"{tuple(self.axis_sizes)}"
+                )
+        return packed_gemm_pspecs(layout, axis, **kw)
 
     # -- activations / state ----------------------------------------------
 

@@ -38,12 +38,31 @@ backend      operands            kernel                      pad correction
              (4, M, Kw)          pairs
 ``vpu-k8``   8-bit plane stacks  same kernel, 64 plane       none
              (8, M, Kw)          pairs
+``shard-*``  same as the inner   inner kernel under          on the reduced
+             backend, mesh-      shard_map: Kw-partial raw   sum, ONCE (see
+             partitioned         outputs + int32 psum        below)
 ===========  ==================  ==========================  ================
 
 Other w_bits in 2..8 (w3/w5/w6/w7) convert + serve through the ``"xla"``
 dequant fallback; :func:`register_backend` can add ``vpu-k3`` etc.
 Asymmetric widths (e.g. w4a8) are supported: the plane kernel takes
 ka != kb stacks and resolution follows the WEIGHT width.
+
+**Tensor-parallel serving** (the ``shard-`` family: ``shard-vpu``,
+``shard-mxu``, ``shard-vpu-k2/k4/k8``): the same Pallas kernels run under
+``shard_map`` on ``GemmConfig.mesh``, with the operand layouts owned by
+``dist.sharding.packed_gemm_pspecs`` (the Megatron pair —
+``shard_layout="k"`` partitions the packed Kw dimension over
+``GemmConfig.shard_axis`` and ``psum``s the RAW integer kernel outputs
+(mismatch counts / padded dots / weighted plane popcounts, all exactly
+additive over disjoint Kw slices); ``shard_layout="n"`` partitions weight
+rows with replicated activations and needs no collective).  Pad
+correction and the fused epilogue apply exactly once on the reduced sum,
+so sharded results are BIT-IDENTICAL to single-device at any split.  The
+grouped (MoE) form composes expert parallelism over
+``GemmConfig.expert_axis`` with the Kw partition.  :func:`unsharded`
+strips the family back to its inner single-device backend — required when
+a caller is already inside a ``shard_map`` body (nn/mlp.py's EP path).
 
 Entry points:
 
@@ -78,8 +97,10 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.core import bitpack, quant
 from repro.core.policy import QuantSpec
+from repro.dist.sharding import packed_gemm_pspecs
 from repro.kernels import ref
 from repro.kernels.kbit_gemm import (
     kbit_plane_gemm_batched_pallas,
@@ -87,6 +108,7 @@ from repro.kernels.kbit_gemm import (
 )
 from repro.kernels.pack_bits import pack_sign_pallas
 from repro.kernels.xnor_gemm import (
+    mxu_pad_inflation,
     xnor_dot_mxu_batched_pallas,
     xnor_dot_mxu_pallas,
     xnor_mismatch_batched_pallas,
@@ -182,6 +204,15 @@ class GemmConfig:
 
     ``interpret=None`` reads REPRO_PALLAS_INTERPRET (default: interpret,
     the only mode available on this CPU container).
+
+    The ``shard-*`` backends additionally read the tensor-parallel knobs:
+    ``mesh`` (the jax Mesh to shard_map over — hashable, so the config
+    stays a legal jit static argument; ``QCtx`` fills it from its own mesh
+    when a shard backend is configured), ``shard_axis`` (the mesh axis the
+    packed Kw dimension partitions over in the ``"k"`` layout, or weight N
+    rows in the ``"n"`` layout), ``shard_layout`` (``"k"`` | ``"n"``, see
+    ``dist.sharding.packed_gemm_pspecs``), and ``expert_axis`` (optional
+    second mesh axis for expert parallelism on the grouped path).
     """
 
     backend: str = "vpu"
@@ -191,6 +222,10 @@ class GemmConfig:
     chunk_words: int | None = None
     interpret: bool | None = None
     bits: int | None = None
+    mesh: Any = None
+    shard_axis: str = "model"
+    shard_layout: str = "k"
+    expert_axis: str | None = None
 
     def tiles(self, m: int, n: int, kw: int,
               backend: str | None = None) -> TileConfig:
@@ -274,12 +309,16 @@ def apply_epilogue(
 class Backend:
     """One way to execute the packed quantized GEMM.
 
+    Every kernel-path callable takes the live :class:`GemmConfig` as its
+    last argument (interpret flag, and — for the ``shard-*`` family — the
+    mesh/axis/layout knobs).
+
     1-bit surface (``bits == 1``):
 
-    ``gemm(a_packed, b_packed, k_true, tiles, interpret) -> (M, N) int32``
+    ``gemm(a_packed, b_packed, k_true, tiles, config) -> (M, N) int32``
     must return the EXACT ±1 dot (pad correction included).
 
-    ``gemm_grouped(buckets, w_stack, k_true, tiles, interpret)`` contracts
+    ``gemm_grouped(buckets, w_stack, k_true, tiles, config)`` contracts
     an (E, M, Kw) activation bucket against an (E, N, Kw) weight stack.
 
     ``from_float``: optional shortcut taking raw float activations —
@@ -289,11 +328,11 @@ class Backend:
     k-bit surface (``bits > 1`` plane backends, or the ``from_float_kbit``
     fallbacks on ``"xla"``):
 
-    ``gemm_kbit(a_planes, b_planes, tiles, interpret) -> (M, N) int32``
+    ``gemm_kbit(a_planes, b_planes, tiles, config) -> (M, N) int32``
     returns the raw weighted-plane popcount S (plane counts are read off
     the stacks' leading dims; no pad correction exists on this path).
 
-    ``gemm_kbit_grouped(buckets, w_stack, tiles, interpret)`` is the
+    ``gemm_kbit_grouped(buckets, w_stack, tiles, config)`` is the
     (E, ka, M, Kw) x (E, kb, N, Kw) expert-batched version.
 
     ``from_float_kbit(x2, w_planes, a_bits, w_bits, k_true)`` /
@@ -331,30 +370,70 @@ def get_backend(name: str) -> Backend:
         ) from None
 
 
+_SHARD_PREFIX = "shard-"
+
+
 def resolve_backend(name: str, w_bits: int) -> str:
     """Map a base backend name + the layer's weight bit width onto the
     registry entry that executes it (the paper's full 1..k family behind
     one config knob):
 
     * ``w_bits == 1`` — the name is used as-is (the 1-bit entries), except
-      that a plane backend down-resolves to ``"vpu"`` (plane entries have
-      no ±1 kernel, and per-layer policies mix 1-bit and k-bit layers
-      under one configured base name).
+      that a plane backend down-resolves to its family's 1-bit entry
+      (``"vpu"``, or ``"shard-vpu"`` for the tensor-parallel family —
+      plane entries have no ±1 kernel, and per-layer policies mix 1-bit
+      and k-bit layers under one configured base name).
     * an entry that already handles ``w_bits`` (a matching ``vpu-kN`` or a
       ``from_float_kbit`` fallback like ``"xla"``) — used as-is.
-    * otherwise ``vpu-k{w_bits}`` when registered, else the ``"xla"``
+    * otherwise the family's ``vpu-k{w_bits}`` when registered
+      (``shard-vpu-k{w_bits}`` for shard base names), else the ``"xla"``
       dequant fallback (w3/w5/... stay correct, just not plane-packed).
     """
+    prefix = _SHARD_PREFIX if name.startswith(_SHARD_PREFIX) else ""
     if w_bits <= 1:
         be = _REGISTRY.get(name)
         if be is not None and be.bits > 1:
-            return "vpu"
+            return prefix + "vpu"
         return name
     be = get_backend(name)  # unknown base names raise here, not fall back
     if be.bits == w_bits or be.from_float_kbit is not None:
         return name
-    kname = f"vpu-k{w_bits}"
-    return kname if kname in _REGISTRY else "xla"
+    kname = f"{prefix}vpu-k{w_bits}"
+    if kname in _REGISTRY:
+        return kname
+    if prefix:
+        # the xla dequant fallback is single-device: a shard-* base name
+        # at a width with no plane entry silently loses its configured
+        # tensor parallelism for that layer — say so, once per combo
+        _warn_shard_fallback(name, w_bits)
+    return "xla"
+
+
+@functools.lru_cache(maxsize=None)  # once per (name, w_bits)
+def _warn_shard_fallback(name: str, w_bits: int) -> None:
+    import warnings
+
+    warnings.warn(
+        f"backend {name!r} has no plane entry for w_bits={w_bits}; this "
+        "layer falls back to the SINGLE-DEVICE 'xla' dequant path (its "
+        "configured tensor parallelism does not apply). Register "
+        f"'shard-vpu-k{w_bits}' or use a width in {{2,4,8}} to keep the "
+        "GEMM sharded.",
+        stacklevel=3,
+    )
+
+
+def unsharded(config: GemmConfig) -> GemmConfig:
+    """Strip a config's ``shard-*`` backend back to its inner single-device
+    backend (and drop the mesh).  Callers that are ALREADY inside a
+    ``shard_map`` body (nn/mlp.py's expert-parallel path) must route their
+    GEMMs through this — nesting a shard backend's shard_map inside
+    another is an error."""
+    if not config.backend.startswith(_SHARD_PREFIX):
+        return config
+    return dataclasses.replace(
+        config, backend=config.backend[len(_SHARD_PREFIX):], mesh=None
+    )
 
 
 def _round_up(x: int, m: int) -> int:
@@ -377,58 +456,85 @@ def _pad_tiles(a: jax.Array, b: jax.Array, tiles: TileConfig):
     return a, b
 
 
-# --- vpu: the literal paper algorithm (xnor + popcount on the VPU) --------
+# --- raw kernel seams (shared by single-device and shard backends) --------
+# Each returns the kernel's RAW integer output (tile padding handled, rows
+# sliced back) plus, for the MXU, the padded word count actually
+# contracted.  Raw outputs over disjoint Kw slices sum exactly, so the
+# shard backends psum these and correct once on the reduced sum.
 
 
-def _vpu_gemm(ap, bp, k_true, tiles, interpret):
+def _vpu_raw(ap, bp, tiles, interpret):
+    """Raw xor-mismatch counts (m, n) int32 (pad bits are 0 in both
+    operands -> 0 mismatches, so no per-call term exists)."""
     m, n = ap.shape[0], bp.shape[0]
     ap, bp = _pad_tiles(ap, bp, tiles)
-    mism = xnor_mismatch_pallas(
+    return xnor_mismatch_pallas(
         ap, bp, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw,
         chunk_words=tiles.chunk_words, interpret=interpret,
     )[:m, :n]
-    # pad bits are 0 in both operands -> 0 mismatches; Eq. 2 inverse:
-    return k_true - 2 * mism
 
 
-def _vpu_gemm_grouped(buckets, w_stack, k_true, tiles, interpret):
+def _mxu_raw(ap, bp, tiles, interpret):
+    """Raw padded MXU dot (m, n) int32 and the word count it contracted."""
+    m, n = ap.shape[0], bp.shape[0]
+    ap, bp = _pad_tiles(ap, bp, tiles)
+    dot = xnor_dot_mxu_pallas(
+        ap, bp, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw, interpret=interpret
+    )[:m, :n]
+    return dot, ap.shape[-1]
+
+
+def _vpu_raw_grouped(buckets, w_stack, tiles, interpret):
     m, n = buckets.shape[1], w_stack.shape[1]
     buckets, w_stack = _pad_tiles(buckets, w_stack, tiles)
-    mism = xnor_mismatch_batched_pallas(
+    return xnor_mismatch_batched_pallas(
         buckets, w_stack, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw,
         chunk_words=tiles.chunk_words, interpret=interpret,
     )[:, :m, :n]
-    return k_true - 2 * mism
+
+
+def _mxu_raw_grouped(buckets, w_stack, tiles, interpret):
+    m, n = buckets.shape[1], w_stack.shape[1]
+    buckets, w_stack = _pad_tiles(buckets, w_stack, tiles)
+    dot = xnor_dot_mxu_batched_pallas(
+        buckets, w_stack, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw,
+        interpret=interpret,
+    )[:, :m, :n]
+    return dot, buckets.shape[-1]
+
+
+# --- vpu: the literal paper algorithm (xnor + popcount on the VPU) --------
+
+
+def _vpu_gemm(ap, bp, k_true, tiles, config):
+    # Eq. 2 inverse on the raw mismatch count:
+    return k_true - 2 * _vpu_raw(ap, bp, tiles, config._interpret)
+
+
+def _vpu_gemm_grouped(buckets, w_stack, k_true, tiles, config):
+    return k_true - 2 * _vpu_raw_grouped(buckets, w_stack, tiles,
+                                         config._interpret)
 
 
 # --- mxu: unpack packed words in VMEM, contract on the MXU ----------------
 
 
-def _mxu_gemm(ap, bp, k_true, tiles, interpret):
-    m, n = ap.shape[0], bp.shape[0]
-    ap, bp = _pad_tiles(ap, bp, tiles)
-    padded_dot = xnor_dot_mxu_pallas(
-        ap, bp, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw, interpret=interpret
-    )[:m, :n]
-    # pad bits (0 in both operands) unpack to (-1)·(-1) = +1 each
-    return padded_dot - (ap.shape[-1] * WORD_BITS - k_true)
+def _mxu_gemm(ap, bp, k_true, tiles, config):
+    padded_dot, words = _mxu_raw(ap, bp, tiles, config._interpret)
+    return padded_dot - mxu_pad_inflation(words, k_true)
 
 
-def _mxu_gemm_grouped(buckets, w_stack, k_true, tiles, interpret):
-    m, n = buckets.shape[1], w_stack.shape[1]
-    buckets, w_stack = _pad_tiles(buckets, w_stack, tiles)
-    padded_dot = xnor_dot_mxu_batched_pallas(
-        buckets, w_stack, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw,
-        interpret=interpret,
-    )[:, :m, :n]
-    return padded_dot - (buckets.shape[-1] * WORD_BITS - k_true)
+def _mxu_gemm_grouped(buckets, w_stack, k_true, tiles, config):
+    padded_dot, words = _mxu_raw_grouped(buckets, w_stack, tiles,
+                                         config._interpret)
+    return padded_dot - mxu_pad_inflation(words, k_true)
 
 
 # --- xla: pure-jnp fallback / dry-run lowering target ---------------------
 
 
-def _xla_gemm(ap, bp, k_true, tiles, interpret):
-    del tiles, interpret
+def _xla_gemm(ap, bp, k_true, tiles, config):
+    del tiles, config
     return ref.xnor_gemm_ref(ap, bp, k_true)
 
 
@@ -520,26 +626,26 @@ def _pad_planes(a: jax.Array, b: jax.Array, tiles: TileConfig):
     return a, b
 
 
-def _vpu_kbit_gemm(a_planes, b_planes, tiles, interpret):
+def _vpu_kbit_gemm(a_planes, b_planes, tiles, config):
     m, n = a_planes.shape[1], b_planes.shape[1]
     a_planes, b_planes = _pad_planes(a_planes, b_planes, tiles)
     return kbit_plane_gemm_pallas(
         a_planes, b_planes, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw,
-        chunk_words=tiles.chunk_words, interpret=interpret,
+        chunk_words=tiles.chunk_words, interpret=config._interpret,
     )[:m, :n]
 
 
-def _vpu_kbit_gemm_grouped(buckets, w_stack, tiles, interpret):
+def _vpu_kbit_gemm_grouped(buckets, w_stack, tiles, config):
     m, n = buckets.shape[2], w_stack.shape[2]
     buckets, w_stack = _pad_planes(buckets, w_stack, tiles)
     return kbit_plane_gemm_batched_pallas(
         buckets, w_stack, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw,
-        chunk_words=tiles.chunk_words, interpret=interpret,
+        chunk_words=tiles.chunk_words, interpret=config._interpret,
     )[:, :m, :n]
 
 
-def _xla_kbit_s(a_planes, b_planes, tiles, interpret):
-    del tiles, interpret
+def _xla_kbit_s(a_planes, b_planes, tiles, config):
+    del tiles, config
     return ref.kbit_gemm_ref(a_planes, b_planes)
 
 
@@ -573,6 +679,179 @@ def _xla_kbit_from_float_grouped(x_sorted, w_stack, group_sizes, a_bits,
     return jax.lax.ragged_dot(xq, w_ekn, group_sizes)
 
 
+# --- shard-*: tensor-parallel packed GEMM (shard_map over config.mesh) ----
+# The same Pallas kernels run per mesh shard on their operand slice; the
+# RAW integer outputs (mismatch counts / padded dots / plane popcounts)
+# psum over the contraction axis, and pad correction + epilogue apply once
+# on the reduced sum — sharded results are bit-identical to single-device.
+# Operand layouts come from dist.sharding.packed_gemm_pspecs; tiles are
+# re-selected for the PER-SHARD shapes (the caller's tiles argument covers
+# the global operand and is ignored here).
+
+
+def _shard_ctx(config: GemmConfig, what: str):
+    """Validate the tensor-parallel knobs; returns (mesh, contraction
+    axis, its size, expert-axis size)."""
+    mesh = config.mesh
+    if mesh is None:
+        raise ValueError(
+            f"{what} needs GemmConfig.mesh (a jax Mesh) — thread it via "
+            "QCtx(mesh=...) or GemmConfig(mesh=...)"
+        )
+    sizes = {k: int(v) for k, v in dict(mesh.shape).items()}
+    axis = config.shard_axis
+    if axis not in sizes:
+        raise ValueError(
+            f"{what}: shard_axis {axis!r} not on mesh axes {tuple(sizes)}"
+        )
+    ea = config.expert_axis
+    if ea is not None and ea not in sizes:
+        raise ValueError(
+            f"{what}: expert_axis {ea!r} not on mesh axes {tuple(sizes)}"
+        )
+    return mesh, axis, sizes[axis], (sizes[ea] if ea else 1)
+
+
+def _shard_gemm(inner, ap, bp, k_true, tiles, config):
+    del tiles  # re-selected for the per-shard shapes below
+    if inner not in ("vpu", "mxu"):
+        # the raw-seam branches below are kernel-specific; a new 1-bit
+        # backend needs its own raw/correction pair wired here
+        raise ValueError(f"no sharded raw seam for inner backend {inner!r}")
+    mesh, axis, ns, _ = _shard_ctx(config, f"backend 'shard-{inner}'")
+    interp = config._interpret
+    m, n = ap.shape[0], bp.shape[0]
+    if config.shard_layout == "n":
+        # column-parallel: each shard runs the full contraction (its own
+        # pad correction included) over its slice of weight rows
+        part = packed_gemm_pspecs("n", axis)
+        bp_p = _pad_axis(bp, 0, ns)
+        t = config.tiles(m, bp_p.shape[0] // ns, ap.shape[1], backend=inner)
+        inner_be = get_backend(inner)
+
+        def body_n(a_loc, b_loc):
+            return inner_be.gemm(a_loc, b_loc, k_true, t, config)
+
+        out = shard_map(body_n, mesh=mesh, in_specs=(part.a, part.w),
+                        out_specs=part.out, check_vma=False)(ap, bp_p)
+        return out[:, :n]
+    part = packed_gemm_pspecs(config.shard_layout, axis)
+    ap_p = _pad_axis(ap, 1, ns)  # zero words: 0 mismatches / counted pads
+    bp_p = _pad_axis(bp, 1, ns)
+    kw_loc = ap_p.shape[1] // ns
+    t = config.tiles(m, n, kw_loc, backend=inner)
+    if inner == "vpu":
+
+        def body_vpu(a_loc, b_loc):
+            return jax.lax.psum(_vpu_raw(a_loc, b_loc, t, interp),
+                                part.reduce_axis)
+
+        mism = shard_map(body_vpu, mesh=mesh, in_specs=(part.a, part.w),
+                         out_specs=part.out, check_vma=False)(ap_p, bp_p)
+        return k_true - 2 * mism
+
+    def body_mxu(a_loc, b_loc):
+        dot, _ = _mxu_raw(a_loc, b_loc, t, interp)
+        return jax.lax.psum(dot, part.reduce_axis)
+
+    dot = shard_map(body_mxu, mesh=mesh, in_specs=(part.a, part.w),
+                    out_specs=part.out, check_vma=False)(ap_p, bp_p)
+    # every shard contracted round_up(kw_loc, bkw) words; correct ONCE
+    return dot - mxu_pad_inflation(ns * _round_up(kw_loc, t.bkw), k_true)
+
+
+def _shard_gemm_grouped(inner, buckets, w_stack, k_true, tiles, config):
+    # expert-parallel (config.expert_axis) x Kw-parallel (config.shard_axis)
+    # — the grouped path has no "n" layout (dist.sharding docstring), so a
+    # configured shard_layout="n" is overridden to "k" here (mixed
+    # dense+MoE models legitimately share one config; see
+    # quant_gemm_grouped's docstring)
+    del tiles
+    if inner not in ("vpu", "mxu"):
+        raise ValueError(f"no sharded raw seam for inner backend {inner!r}")
+    mesh, axis, ns, es = _shard_ctx(
+        config, f"backend 'shard-{inner}' (grouped)")
+    interp = config._interpret
+    e, ec = buckets.shape[0], buckets.shape[1]
+    n = w_stack.shape[1]
+    part = packed_gemm_pspecs("k", axis, expert_axis=config.expert_axis,
+                              grouped=True)
+    b_p = _pad_axis(_pad_axis(buckets, 0, es), 2, ns)
+    w_p = _pad_axis(_pad_axis(w_stack, 0, es), 2, ns)
+    kw_loc = b_p.shape[-1] // ns
+    t = config.tiles(ec, n, kw_loc, backend=inner)
+    if inner == "vpu":
+
+        def body_vpu(b_loc, wl):
+            return jax.lax.psum(_vpu_raw_grouped(b_loc, wl, t, interp),
+                                part.reduce_axis)
+
+        mism = shard_map(body_vpu, mesh=mesh, in_specs=(part.a, part.w),
+                         out_specs=part.out, check_vma=False)(b_p, w_p)
+        return (k_true - 2 * mism)[:e]
+
+    def body_mxu(b_loc, wl):
+        dot, _ = _mxu_raw_grouped(b_loc, wl, t, interp)
+        return jax.lax.psum(dot, part.reduce_axis)
+
+    dot = shard_map(body_mxu, mesh=mesh, in_specs=(part.a, part.w),
+                    out_specs=part.out, check_vma=False)(b_p, w_p)
+    words = ns * _round_up(kw_loc, t.bkw)
+    return (dot - mxu_pad_inflation(words, k_true))[:e]
+
+
+def _shard_kbit_gemm(a_planes, b_planes, tiles, config):
+    del tiles
+    mesh, axis, ns, _ = _shard_ctx(config, "backend 'shard-vpu-k*'")
+    inner = f"vpu-k{b_planes.shape[0]}"  # tile-table row (falls back fine)
+    m, n = a_planes.shape[1], b_planes.shape[1]
+    if config.shard_layout == "n":
+        part = packed_gemm_pspecs("n", axis, planes=True)
+        b_p = _pad_axis(b_planes, 1, ns)
+        t = config.tiles(m, b_p.shape[1] // ns, a_planes.shape[-1],
+                         backend=inner)
+
+        def body_n(a_loc, b_loc):
+            return _vpu_kbit_gemm(a_loc, b_loc, t, config)
+
+        out = shard_map(body_n, mesh=mesh, in_specs=(part.a, part.w),
+                        out_specs=part.out, check_vma=False)(a_planes, b_p)
+        return out[:, :n]
+    part = packed_gemm_pspecs(config.shard_layout, axis, planes=True)
+    a_p = _pad_axis(a_planes, 2, ns)
+    b_p = _pad_axis(b_planes, 2, ns)
+    t = config.tiles(m, n, a_p.shape[-1] // ns, backend=inner)
+
+    def body_k(a_loc, b_loc):
+        # raw S needs no pad correction anywhere: zero plane words AND to 0
+        return jax.lax.psum(_vpu_kbit_gemm(a_loc, b_loc, t, config),
+                            part.reduce_axis)
+
+    return shard_map(body_k, mesh=mesh, in_specs=(part.a, part.w),
+                     out_specs=part.out, check_vma=False)(a_p, b_p)
+
+
+def _shard_kbit_gemm_grouped(buckets, w_stack, tiles, config):
+    del tiles
+    mesh, axis, ns, es = _shard_ctx(config, "backend 'shard-vpu-k*' "
+                                            "(grouped)")
+    e, ec = buckets.shape[0], buckets.shape[2]
+    kb, n = w_stack.shape[1], w_stack.shape[2]
+    part = packed_gemm_pspecs("k", axis, expert_axis=config.expert_axis,
+                              planes=True, grouped=True)
+    b_p = _pad_axis(_pad_axis(buckets, 0, es), 3, ns)
+    w_p = _pad_axis(_pad_axis(w_stack, 0, es), 3, ns)
+    t = config.tiles(ec, n, b_p.shape[-1] // ns, backend=f"vpu-k{kb}")
+
+    def body(b_loc, wl):
+        return jax.lax.psum(_vpu_kbit_gemm_grouped(b_loc, wl, t, config),
+                            part.reduce_axis)
+
+    s = shard_map(body, mesh=mesh, in_specs=(part.a, part.w),
+                  out_specs=part.out, check_vma=False)(b_p, w_p)
+    return s[:e]
+
+
 def _kbit_only(*_args, **_kw):
     raise ValueError(
         "k-bit plane backends execute k-bit GEMMs only; call the entry "
@@ -601,6 +880,24 @@ for _k in (2, 4, 8):
             bits=_k,
             gemm_kbit=_vpu_kbit_gemm,
             gemm_kbit_grouped=_vpu_kbit_gemm_grouped,
+        )
+    )
+for _inner in ("vpu", "mxu"):
+    register_backend(
+        Backend(
+            f"shard-{_inner}",
+            functools.partial(_shard_gemm, _inner),
+            gemm_grouped=functools.partial(_shard_gemm_grouped, _inner),
+        )
+    )
+for _k in (2, 4, 8):
+    register_backend(
+        Backend(
+            f"shard-vpu-k{_k}",
+            _kbit_only,
+            bits=_k,
+            gemm_kbit=_shard_kbit_gemm,
+            gemm_kbit_grouped=_shard_kbit_gemm_grouped,
         )
     )
 
@@ -657,7 +954,7 @@ def packed_gemm(
     be = get_backend(name)
     tiles = config.tiles(a_packed.shape[0], b_packed.shape[0],
                          a_packed.shape[1], backend=name)
-    return be.gemm(a_packed, b_packed, k_true, tiles, config._interpret)
+    return be.gemm(a_packed, b_packed, k_true, tiles, config)
 
 
 @functools.partial(jax.jit, static_argnames=("config",))
@@ -677,7 +974,7 @@ def packed_kbit_gemm(
                             a_planes.shape[0], b_planes.shape[0])
     tiles = config.tiles(a_planes.shape[1], b_planes.shape[1],
                          a_planes.shape[2], backend=name)
-    return be.gemm_kbit(a_planes, b_planes, tiles, config._interpret)
+    return be.gemm_kbit(a_planes, b_planes, tiles, config)
 
 
 def _kbit_dot_from_float(x2, w_planes, *, k_true, config, w_bits, a_bits):
@@ -694,7 +991,7 @@ def _kbit_dot_from_float(x2, w_planes, *, k_true, config, w_bits, a_bits):
     a_planes = bitpack.pack_planes(codes, a_bits)  # (ka, M, Kw)
     tiles = config.tiles(x2.shape[0], w_planes.shape[1],
                          a_planes.shape[-1], backend=name)
-    s = be.gemm_kbit(a_planes, w_planes, tiles, config._interpret)
+    s = be.gemm_kbit(a_planes, w_planes, tiles, config)
     t_sum = codes.astype(jnp.int32).sum(axis=-1)  # (M,)
     return _kbit_dequant(s, t_sum[:, None], a_bits, w_bits)
 
@@ -745,7 +1042,7 @@ def quant_gemm(
             xp = pack_activations(x2, interpret=config._interpret)
             tiles = config.tiles(xp.shape[0], w_packed.shape[0],
                                  xp.shape[1], backend=name)
-            dot = be.gemm(xp, w_packed, k_true, tiles, config._interpret)
+            dot = be.gemm(xp, w_packed, k_true, tiles, config)
         n_out = w_packed.shape[0]
     y = apply_epilogue(
         dot.astype(jnp.float32), k_true=k_true, epilogue=epilogue,
@@ -813,6 +1110,11 @@ def quant_gemm_grouped(
     activations are binarized, packed, and bucketed ONCE and contracted
     against each stack, returning a tuple.
 
+    ``shard-*`` backends run the contraction expert-parallel
+    (``config.expert_axis``) x Kw-parallel (``config.shard_axis``); a
+    configured ``shard_layout="n"`` applies only to the dense GEMMs of a
+    mixed model — the grouped path has no "n" layout and uses "k" here.
+
     Pallas backends scatter the packed words into per-expert buckets and
     run the expert-batched xnor kernel, so only packed words cross HBM —
     closing the 32x traffic win the old unpack-to-float expert path
@@ -870,7 +1172,7 @@ def quant_gemm_grouped(
     outs = []
     for w in stacks:
         dots = be.gemm_grouped(buckets, w, k_true, tiles,
-                               config._interpret)  # (E, ec, N)
+                               config)  # (E, ec, N)
         y = dots[g_safe, jnp.minimum(pos, ec - 1)]
         outs.append(jnp.where(valid[:, None], y, 0).astype(out_dtype))
     return tuple(outs) if isinstance(w_stack, tuple) else outs[0]
@@ -915,7 +1217,7 @@ def _kbit_grouped(x_sorted, w_stack, stacks, group_sizes, g, g_safe, pos,
     outs = []
     for w in stacks:
         s = be.gemm_kbit_grouped(buckets, w, tiles,
-                                 config._interpret)  # (E, ec, N)
+                                 config)  # (E, ec, N)
         y = s[g_safe, jnp.minimum(pos, ec - 1)]
         dot = _kbit_dequant(y, t_sum[:, None], a_bits, w_bits)
         outs.append(jnp.where(valid[:, None], dot, 0).astype(out_dtype))

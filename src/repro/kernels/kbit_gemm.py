@@ -22,6 +22,11 @@ bit-exact (to fp32 rounding) with the fake-quant train path, the same
 
 Unlike both 1-bit kernels there is NO pad correction: tail/pad bits are 0
 in every plane of both operands and AND against a zero word contributes 0.
+That also makes the raw S **K-partial-safe** at any split point: S over
+disjoint Kw slices sums exactly (integer adds; zero pad words introduced
+by a split contribute 0), so the tensor-parallel ``shard-vpu-k*`` dispatch
+backends partition Kw across mesh shards and ``psum`` the per-shard S with
+no correction term anywhere — the dequant rewrite runs once on the sum.
 
 int32 accumulator bound: ``S <= K * Na * Nw``, and the dequant numerator
 ``2S - Nw*T`` doubles it — dispatch rejects ``2 * K * Na * Nw >= 2^31``

@@ -23,6 +23,13 @@ values per word, packed along K — see core/bitpack.py):
 
 Both kernels tile (M, N, K) with a sequential-K innermost grid axis and an
 fp32/int32 accumulator initialised at k==0, the standard TPU matmul pattern.
+
+Both raw outputs are **K-partial-safe**: mismatch counts (VPU) and padded
+dots (MXU) over disjoint Kw slices sum exactly — integer addition, no
+rounding — which is the seam the tensor-parallel ``shard-*`` dispatch
+backends rely on (each mesh shard runs the kernel on its Kw slice, the raw
+int32 partials ``psum`` over the contraction axis, and the pad correction
+below applies ONCE on the reduced sum).
 """
 
 from __future__ import annotations
@@ -38,6 +45,18 @@ from repro.core.bitpack import WORD_BITS
 DEFAULT_BM = 128
 DEFAULT_BN = 128
 DEFAULT_BKW = 64  # words: 64 * 32 = 2048 binary values per K-step
+
+
+def mxu_pad_inflation(total_words: int, k_true: int) -> int:
+    """Pad-bit inflation of the (summed) raw MXU dot: every zero pad bit
+    unpacks to ``(-1)·(-1) = +1``, so a contraction that touched
+    ``total_words`` packed words of a ``k_true``-bit operand overshoots the
+    true ±1 dot by exactly this many.  ``total_words`` is the number of
+    words ACTUALLY contracted — one kernel call's post-tile-padding Kw for
+    the single-device path, the per-shard padded Kw summed over all shards
+    for the tensor-parallel path (the correction is linear in pad words, so
+    it applies once on the psum-reduced dot)."""
+    return total_words * WORD_BITS - k_true
 
 
 def _vpu_kernel(a_ref, b_ref, out_ref, *, chunk_words: int):

@@ -211,7 +211,8 @@ def model_flops(spec, cfg, shape: ShapeSpec) -> float:
 def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
              quant: str, outdir: str | None,
              seq_parallel: bool = False,
-             microbatch: int | None = None) -> dict:
+             microbatch: int | None = None,
+             gemm_backend: str = "xla") -> dict:
     spec = registry.get(arch_id)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -231,10 +232,13 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
     policy = parse_quant(quant[:-len("_packed")] if want_packed else quant)
     packed = policy if want_packed and shape.kind != "train" else None
 
-    # the "xla" backend is what the dry-run lowers: pallas_call in interpret
-    # mode is not a meaningful cost-analysis target (see kernels/dispatch)
+    # the "xla" backend is the default lowering: pallas_call in interpret
+    # mode is not a meaningful cost-analysis target (see kernels/dispatch).
+    # --gemm-backend shard-* lowers the tensor-parallel packed GEMM instead
+    # (shard_map over this cell's 'model' axis) — proving the sharded
+    # serving graph partitions coherently at production mesh sizes.
     ctx = QCtx(policy=policy, compute_dtype=jnp.bfloat16,
-               gemm_config=GemmConfig(backend="xla"), mesh=mesh)
+               gemm_config=GemmConfig(backend=gemm_backend), mesh=mesh)
     rs = Resolver(mesh)
 
     def lower_cell(scan_blocks: bool):
@@ -385,6 +389,15 @@ def main() -> None:
                     help="fp | binary[_scaled] | wXaY (e.g. w4a4), with "
                          "optional _packed suffix for the packed serving "
                          "layout (e.g. binary_packed, w4a4_packed)")
+    ap.add_argument("--gemm-backend", default="xla",
+                    choices=["xla", "vpu", "mxu",
+                             "vpu-k2", "vpu-k4", "vpu-k8",
+                             "shard-vpu", "shard-mxu",
+                             "shard-vpu-k2", "shard-vpu-k4",
+                             "shard-vpu-k8"],
+                    help="dispatch backend the cell lowers (default the "
+                         "in-graph xla dequant path; shard-* lowers the "
+                         "tensor-parallel packed GEMM on the cell's mesh)")
     ap.add_argument("--seq-parallel", action="store_true",
                     help="Megatron-SP residual sharding (train cells)")
     ap.add_argument("--microbatch", type=int, default=None,
@@ -409,7 +422,8 @@ def main() -> None:
             rec = run_cell(arch_id, shape_name, multi_pod=args.multi_pod,
                            quant=args.quant, outdir=args.out,
                            seq_parallel=args.seq_parallel,
-                           microbatch=args.microbatch)
+                           microbatch=args.microbatch,
+                           gemm_backend=args.gemm_backend)
             print(_fmt(rec), flush=True)
         except Exception as e:  # a failed cell is a bug in the system
             failures += 1

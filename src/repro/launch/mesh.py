@@ -2,7 +2,9 @@
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state (the dry-run forces 512 host devices via XLA_FLAGS before any jax
-import; tests and benches see 1 device).
+import; tests and the CI benches force 8 virtual host devices the same
+way — tests/conftest.py and ci.yml — so the mesh/shard_map paths run on
+plain CPU).
 """
 
 from __future__ import annotations

@@ -10,7 +10,12 @@ Example:
 k-bit (DoReFa) packed serving uses the same flow with ``--quant w4a4`` /
 ``--quant w8a8``: the converter emits bit-plane stacks and the dispatch
 layer resolves ``--backend vpu`` onto the ``vpu-k4``/``vpu-k8`` plane
-kernels per layer (first/last stay fp per policy)."""
+kernels per layer (first/last stay fp per policy).
+
+Tensor-parallel packed serving: ``--backend shard-vpu --shard 4`` runs
+every packed GEMM under shard_map on a 4-way 'model' mesh (Kw-partial
+popcount + psum; bit-identical to single-device — see
+kernels/dispatch.py), and k-bit layers resolve onto ``shard-vpu-k*``."""
 
 from __future__ import annotations
 
@@ -48,9 +53,21 @@ def main() -> None:
                     help="packed checkpoint from --export-packed")
     ap.add_argument("--xnor-backend", "--backend", default="vpu",
                     choices=["vpu", "mxu", "xla",
-                             "vpu-k2", "vpu-k4", "vpu-k8"],
+                             "vpu-k2", "vpu-k4", "vpu-k8",
+                             "shard-vpu", "shard-mxu",
+                             "shard-vpu-k2", "shard-vpu-k4",
+                             "shard-vpu-k8"],
                     help="base GEMM backend; k-bit layers resolve base "
-                         "names onto the vpu-k* plane kernels")
+                         "names onto the vpu-k* plane kernels, and the "
+                         "shard-* family runs the same kernels tensor-"
+                         "parallel across --shard devices")
+    ap.add_argument("--shard", type=int, default=0,
+                    help="tensor-parallel ways for shard-* backends "
+                         "(1-D 'model' mesh; 0 = all local devices)")
+    ap.add_argument("--shard-layout", default="k", choices=["k", "n"],
+                    help="shard-* operand layout: 'k' partitions the "
+                         "packed contraction (Kw-partial popcount + "
+                         "psum), 'n' partitions weight output rows")
     ap.add_argument("--prompts", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -61,8 +78,15 @@ def main() -> None:
     spec = registry.get(args.arch)
     cfg = spec.smoke if args.smoke else spec.config
     policy = parse_quant(args.quant)
-    ctx = QCtx(policy=policy, compute_dtype=jnp.float32,
-               gemm_config=GemmConfig(backend=args.xnor_backend))
+    mesh = None
+    if args.xnor_backend.startswith("shard-"):
+        ways = args.shard or len(jax.devices())
+        mesh = jax.make_mesh((ways,), ("model",))
+        print(f"tensor-parallel packed GEMM: {ways}-way "
+              f"(layout {args.shard_layout!r})")
+    ctx = QCtx(policy=policy, compute_dtype=jnp.float32, mesh=mesh,
+               gemm_config=GemmConfig(backend=args.xnor_backend,
+                                      shard_layout=args.shard_layout))
 
     key = jax.random.PRNGKey(args.seed)
     if spec.family == "lm":

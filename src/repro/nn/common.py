@@ -31,6 +31,9 @@ class QCtx:
 
     ``mesh`` (optional): the physical mesh, enabling shard_map-based layers
     (MoE expert parallelism).  None on single-device runs -> pure-jnp paths.
+    When a tensor-parallel ``shard-*`` GEMM backend is configured without
+    its own ``GemmConfig.mesh``, this mesh is threaded into the config so
+    every layer's packed GEMM shards over it.
     """
 
     policy: QuantPolicy
@@ -49,6 +52,15 @@ class QCtx:
             # clear the alias once folded in, so dataclasses.replace(ctx,
             # gemm_config=...) cannot silently re-apply a stale backend
             object.__setattr__(self, "xnor_backend", None)
+        if (
+            self.mesh is not None
+            and self.gemm_config.mesh is None
+            and self.gemm_config.backend.startswith("shard-")
+        ):
+            object.__setattr__(
+                self, "gemm_config",
+                dataclasses.replace(self.gemm_config, mesh=self.mesh),
+            )
 
     def dense(self, params: Params, x: jax.Array, path: str) -> jax.Array:
         return qlayers.qdense(

@@ -244,11 +244,16 @@ def moe_apply(
         # 2x load-balance slack over the balanced share (capacity drop)
         cap = min(max(2 * t_loc * cfg.top_k // msize, 64), t_loc * cfg.top_k)
 
+        # inside the EP shard_map body the GEMMs must run single-device:
+        # a shard-* backend would nest a second shard_map over the same
+        # mesh (dispatch.unsharded strips the family to its inner kernel)
+        gemm_config = dispatch.unsharded(ctx.gemm_config)
+
         def local(xq, gw, gi, ew_loc):
             mi = jax.lax.axis_index("model")
             y_part = _moe_compute_local(
                 xq, gw, gi, ew_loc, cfg, spec, ctx.compute_dtype,
-                ctx.gemm_config, mi * e_loc, e_loc, cap)
+                gemm_config, mi * e_loc, e_loc, cap)
             return jax.lax.psum(y_part, "model")
 
         dspec = P(dp if dp else None)

@@ -15,6 +15,13 @@ quantized GEMM runs through ``kernels/dispatch`` — backend and tile choice
 follow the ``QCtx.gemm_config`` threaded into every layer, and each
 layer's ``QuantSpec`` bit widths pick the xnor or bit-plane kernels — the
 decode memory-roofline win analysed in EXPERIMENTS.md.
+
+Tensor-parallel serving: configure a ``shard-*`` backend (e.g.
+``GemmConfig(backend="shard-vpu")``) plus a mesh (``EngineConfig.mesh``,
+``GemmConfig.mesh``, or ``QCtx.mesh``) and every packed GEMM runs under
+``shard_map`` with the packed K dimension partitioned across devices —
+bit-identical logits to the single-device engine (the Kw-partial popcount
+psums exactly; see kernels/dispatch.py).
 """
 
 from __future__ import annotations
@@ -42,15 +49,30 @@ class EngineConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0  # 0 = greedy
     # per-engine override of how quantized GEMMs execute (backend + tiles);
-    # None inherits the QCtx's gemm_config
+    # None inherits the QCtx's gemm_config.  Tensor-parallel serving picks
+    # a `shard-*` backend here (or on the QCtx) — the shard mesh is `mesh`
+    # below when set (the per-engine override always wins), else the
+    # GemmConfig's own `mesh`, else the QCtx's mesh.
     gemm_config: GemmConfig | None = None
+    # per-engine mesh override for shard-* backends / EP MoE layers
+    mesh: Any = None
 
 
 class Engine:
     def __init__(self, spec: ArchSpec, cfg, ctx: QCtx, params: Params,
                  ecfg: EngineConfig):
-        if ecfg.gemm_config is not None:
-            ctx = dataclasses.replace(ctx, gemm_config=ecfg.gemm_config)
+        gc = ecfg.gemm_config if ecfg.gemm_config is not None \
+            else ctx.gemm_config
+        if ecfg.mesh is not None:
+            ctx = dataclasses.replace(ctx, mesh=ecfg.mesh)
+            if gc.backend.startswith("shard-"):
+                # force the per-engine mesh onto the shard config — a mesh
+                # already threaded in from QCtx.mesh must not win here
+                gc = dataclasses.replace(gc, mesh=ecfg.mesh)
+        if gc is not ctx.gemm_config:
+            # replace() re-runs QCtx.__post_init__, which threads ctx.mesh
+            # into a shard-* gemm_config that carries none of its own
+            ctx = dataclasses.replace(ctx, gemm_config=gc)
         self.spec, self.cfg, self.ctx, self.ecfg = spec, cfg, ctx, ecfg
         self.params = params
         fam = spec.family

@@ -107,6 +107,71 @@ def test_unknown_backend_raises():
         dispatch.get_backend("tpu_v7")
 
 
+def test_unknown_backend_raises_through_entry_points():
+    """A typo'd base name must raise from every entry point, not fall back
+    to some default kernel."""
+    a = jnp.ones((2, 64), jnp.float32)
+    wp = bitpack.pack_sign(jnp.ones((3, 64), jnp.float32))
+    with pytest.raises(ValueError, match="unknown gemm backend"):
+        dispatch.quant_gemm(a, wp, k_true=64,
+                            config=GemmConfig(backend="vpuu"))
+    with pytest.raises(ValueError, match="unknown gemm backend"):
+        dispatch.quant_gemm(a, jnp.zeros((4, 3, 2), jnp.uint32), k_true=64,
+                            config=GemmConfig(backend="vpuu"),
+                            w_bits=4, a_bits=4)
+    with pytest.raises(ValueError, match="unknown gemm backend"):
+        dispatch.quant_gemm_grouped(
+            a, jnp.zeros((2, 3, 2), jnp.uint32),
+            jnp.asarray([1, 1], jnp.int32), k_true=64,
+            config=GemmConfig(backend="shard-xla"))  # no such shard entry
+
+
+def test_resolve_backend_down_resolution():
+    """resolve_backend maps (base name, w_bits) onto the entry that runs
+    it — including 1-bit down-resolution within each family and k-bit
+    up-resolution onto the plane entries."""
+    # 1-bit: plane backends down-resolve to their family's ±1 entry
+    assert dispatch.resolve_backend("vpu-k4", 1) == "vpu"
+    assert dispatch.resolve_backend("vpu-k8", 1) == "vpu"
+    assert dispatch.resolve_backend("shard-vpu-k4", 1) == "shard-vpu"
+    assert dispatch.resolve_backend("vpu", 1) == "vpu"
+    assert dispatch.resolve_backend("shard-mxu", 1) == "shard-mxu"
+    assert dispatch.resolve_backend("xla", 1) == "xla"
+    # k-bit: base names resolve onto the family's plane entry
+    assert dispatch.resolve_backend("vpu", 4) == "vpu-k4"
+    assert dispatch.resolve_backend("mxu", 2) == "vpu-k2"
+    assert dispatch.resolve_backend("shard-vpu", 8) == "shard-vpu-k8"
+    assert dispatch.resolve_backend("shard-mxu", 4) == "shard-vpu-k4"
+    # widths with no plane entry fall back to the xla dequant path
+    assert dispatch.resolve_backend("vpu", 5) == "xla"
+    assert dispatch.resolve_backend("shard-vpu", 3) == "xla"
+    # xla handles every width itself (from_float_kbit)
+    assert dispatch.resolve_backend("xla", 4) == "xla"
+
+
+def test_tile_overrides_reach_kernel(monkeypatch):
+    """GemmConfig tile overrides must reach the traced Pallas call — a
+    spy on the kernel wrapper records the tile kwargs it was invoked
+    with (unique shape so the jit cache cannot satisfy the call)."""
+    seen = {}
+    real = dispatch.xnor_mismatch_pallas
+
+    def spy(ap, bp, **kw):
+        seen.update(kw)
+        return real(ap, bp, **kw)
+
+    monkeypatch.setattr(dispatch, "xnor_mismatch_pallas", spy)
+    m, k, n = 21, 6 * 32, 19
+    a, w = _mats(23, m, k, n)
+    cfg = GemmConfig(backend="vpu", bm=16, bn=8, bkw=3, chunk_words=3)
+    got = dispatch.quant_gemm(a, bitpack.pack_sign(w.T), k_true=k,
+                              config=cfg)
+    assert (seen["bm"], seen["bn"], seen["bkw"], seen["chunk_words"]) == (
+        16, 8, 3, 3)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.sign_gemm_ref(a, w)))
+
+
 def test_tile_table_covers_and_divides():
     for m, n, kw in [(1, 1, 1), (5, 33, 3), (128, 128, 64), (1000, 7, 200)]:
         for backend in ("vpu", "mxu"):

@@ -56,6 +56,82 @@ def test_packed_engine_matches_fakequant(backend):
     np.testing.assert_array_equal(out_fq, out_pk)
 
 
+def test_sharded_engine_matches_unsharded(mesh_factory):
+    """Tensor-parallel packed serving: the same packed checkpoint served
+    through the 'shard-vpu' backend on a 2-device mesh matches the
+    single-device packed engine — identical greedy generations, and
+    logits equal to fp rounding (the sharded GEMM's int32 partials psum
+    exactly — tests/test_shard_gemm.py asserts bit-identity there — but
+    XLA may repartition the surrounding FLOAT ops (fp lm_head, norms)
+    across the mesh, reordering their accumulations by ~1 ulp)."""
+    from repro.kernels.dispatch import GemmConfig
+
+    mesh = mesh_factory(2)
+    spec = registry.get("deepseek-7b")
+    cfg = spec.smoke
+    policy = QuantPolicy.binary()
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    host = jax.tree.map(np.asarray, params)
+    packed, rep = converter.convert(host, policy)
+    assert rep.n_packed > 0
+    packed = jax.tree.map(jnp.asarray, packed)
+
+    ecfg = EngineConfig(batch=2, cache_len=48, max_new_tokens=6)
+    ctx_1d = QCtx(policy=policy, compute_dtype=jnp.float32,
+                  gemm_config=GemmConfig(backend="vpu"))
+    eng_1d = Engine(spec, cfg, ctx_1d, packed, ecfg)
+
+    ctx_sh = QCtx(policy=policy, compute_dtype=jnp.float32,
+                  gemm_config=GemmConfig(backend="shard-vpu", mesh=mesh))
+    assert ctx_sh.gemm_config.mesh is mesh
+    eng_sh = Engine(spec, cfg, ctx_sh, packed, ecfg)
+
+    prompts = np.random.default_rng(3).integers(
+        0, cfg.vocab_size, (2, 8)).astype(np.int32)
+    logits_1d, _ = eng_1d._prefill(packed, jnp.asarray(prompts))
+    logits_sh, _ = eng_sh._prefill(packed, jnp.asarray(prompts))
+    np.testing.assert_allclose(np.asarray(logits_1d),
+                               np.asarray(logits_sh),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(eng_1d.generate(prompts),
+                                  eng_sh.generate(prompts))
+
+
+def test_engine_mesh_threads_into_shard_config(mesh_factory):
+    """EngineConfig.mesh reaches a mesh-less shard gemm_config via the
+    QCtx post-init threading (the launcher/engine wiring path), and — as
+    the per-engine override — beats a mesh the QCtx already threaded in."""
+    from repro.kernels.dispatch import GemmConfig
+
+    mesh = mesh_factory(2)
+    spec = registry.get("granite-3-2b")
+    cfg = spec.smoke
+    ctx = QCtx(policy=QuantPolicy.full_precision(),
+               compute_dtype=jnp.float32)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(spec, cfg, ctx, params,
+                 EngineConfig(batch=1, cache_len=32, max_new_tokens=2,
+                              gemm_config=GemmConfig(backend="shard-vpu"),
+                              mesh=mesh))
+    assert eng.ctx.gemm_config.backend == "shard-vpu"
+    assert eng.ctx.gemm_config.mesh is mesh
+    out = eng.generate(np.zeros((1, 4), np.int32))
+    assert out.shape == (1, 2)
+
+    # ctx auto-threaded mesh_a into its shard config; the per-engine
+    # EngineConfig.mesh must still win over it
+    mesh_a = mesh_factory(1)
+    ctx_a = QCtx(policy=QuantPolicy.full_precision(),
+                 compute_dtype=jnp.float32, mesh=mesh_a,
+                 gemm_config=GemmConfig(backend="shard-vpu"))
+    assert ctx_a.gemm_config.mesh is mesh_a
+    eng2 = Engine(spec, cfg, ctx_a, params,
+                  EngineConfig(batch=1, cache_len=32, max_new_tokens=2,
+                               mesh=mesh))
+    assert eng2.ctx.gemm_config.mesh is mesh
+    assert eng2.ctx.mesh is mesh
+
+
 def test_continuous_positions_decode():
     """Per-batch positions: two sequences at different positions decode
     correctly (continuous batching property)."""

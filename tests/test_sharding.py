@@ -99,6 +99,37 @@ def test_rwkv_state_pspec():
     assert rs.cache_pspecs(cache)["S"] == P("data", "model")
 
 
+def test_gemm_pspecs_layouts():
+    """Resolver.gemm_pspecs: the packed-GEMM operand layouts the shard-*
+    dispatch backends shard_map over (validated against this mesh)."""
+    import pytest
+
+    from repro.dist.sharding import packed_gemm_pspecs
+
+    rs = Resolver(_mesh())
+    k = rs.gemm_pspecs("k")
+    assert k.a == P(None, "model") and k.w == P(None, "model")
+    assert k.out == P(None, None) and k.reduce_axis == "model"
+    n = rs.gemm_pspecs("n")
+    assert n.w == P("model", None) and n.out == P(None, "model")
+    assert n.reduce_axis is None  # column-parallel: no collective
+    g = rs.gemm_pspecs("k", grouped=True, expert_axis="data")
+    assert g.a == P("data", None, "model") and g.out == P("data", None, None)
+    p = rs.gemm_pspecs("k", planes=True)
+    assert p.a == P(None, None, "model")
+
+    # validation: unknown mesh axes / layouts raise at resolve time,
+    # not deep inside shard_map
+    with pytest.raises(ValueError, match="not on mesh"):
+        rs.gemm_pspecs("k", axis="nope")
+    with pytest.raises(ValueError, match="not on mesh"):
+        rs.gemm_pspecs("k", grouped=True, expert_axis="nope")
+    with pytest.raises(ValueError, match="layout"):
+        packed_gemm_pspecs("zigzag", "model")
+    with pytest.raises(ValueError, match="no 'n' layout"):
+        packed_gemm_pspecs("n", "model", grouped=True)
+
+
 def test_master_pspecs_does_not_double_log_demotions():
     """specs.py resolves compute AND master layouts on one Resolver; each
     real demotion must appear once in the operator-facing log."""
