@@ -130,6 +130,64 @@ def fig3_rows(small: bool = False):
 
 
 # ---------------------------------------------------------------------------
+# Fig. 1's "binarize input" stage in isolation: the fused quantize->pack
+# Pallas prologue (kernels/pack_bits.py, via dispatch.pack_activations /
+# pack_act_planes) vs the jnp reference round trip (pack_sign /
+# act_codes -> pack_planes).  Every row carries ``exact_match`` — the
+# fused kernels must be BIT-IDENTICAL to the jnp oracle (code row-sums
+# included), and the CI bench-smoke gate fails the build otherwise.  On
+# this host-CPU rig the Pallas numbers run in interpret mode (correctness
+# evidence, not performance).
+# ---------------------------------------------------------------------------
+
+
+def pack_rows(small: bool = False):
+    from repro.core import quant
+    from repro.kernels import dispatch
+
+    m, k = (64, 512) if small else (512, 4096)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+
+    def fused_sign(x):
+        return dispatch.pack_activations(x, use_pallas=True)
+
+    def jnp_sign(x):
+        return dispatch.pack_activations(x, use_pallas=False)
+
+    want = np.asarray(bitpack.pack_sign(a))
+    got = np.asarray(fused_sign(a))
+    yield {
+        "stage": "pack_sign", "bits": 1, "M": m, "K": k,
+        "jnp_us": round(_time(jnp_sign, a), 1),
+        "fused_us": round(_time(fused_sign, a), 1),
+        "exact_match": bool((got == want).all()),
+    }
+
+    for bits in (2, 4, 8) if not small else (2, 4):
+        def fused_planes(x, b=bits):
+            return dispatch.pack_act_planes(x, b, fused=True)
+
+        def jnp_planes(x, b=bits):
+            return dispatch.pack_act_planes(x, b, fused=False)
+
+        codes = quant.act_codes(a, bits)
+        want_p = np.asarray(bitpack.pack_planes(codes, bits))
+        want_t = np.asarray(codes.astype(jnp.int32).sum(-1))
+        got_p, got_t = fused_planes(a)
+        exact = bool(
+            (np.asarray(got_p) == want_p).all()
+            and (np.asarray(got_t)[:, 0] == want_t).all()
+        )
+        yield {
+            "stage": "quant_pack_planes", "bits": bits, "M": m, "K": k,
+            "jnp_us": round(_time(jnp_planes, a), 1),
+            "fused_us": round(_time(fused_planes, a), 1),
+            "exact_match": exact,
+        }
+
+
+# ---------------------------------------------------------------------------
 # Beyond-paper: the k-bit (DoReFa) sweep — how the bit-plane popcount GEMM
 # scales with bit width.  Work grows as ka*kb plane pairs while packed HBM
 # bytes grow as k/32 of fp32; the sweep reports both so the roofline can

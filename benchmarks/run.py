@@ -6,6 +6,9 @@ provenance block (commit sha, jax version, XLA backend, timestamp) so
 BENCH files are comparable across PRs.
 
   fig1/2/3    GEMM method timing sweeps (channels / filters / kernel)
+  pack        Fig. 1's "binarize input" stage in isolation: fused Pallas
+              quantize->pack prologue vs the jnp reference (1-bit sign
+              pack + k-bit plane pack; every row checks bit-identity)
   kbit        beyond-paper: DoReFa bit-width sweep of the plane-packed GEMM
   shard       beyond-paper: tensor-parallel (shard-*) packed GEMM sweep
               (1/2/4/8-way; every row checks sharded == single-device)
@@ -61,8 +64,8 @@ def _emit(table: str, rows, out):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig2,fig3,kbit,shard,table1,"
-                         "table2,accuracy,lm_sizes,equiv")
+                    help="comma list: fig1,fig2,fig3,pack,kbit,shard,"
+                         "table1,table2,accuracy,lm_sizes,equiv")
     ap.add_argument("--json", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes (CI bench-smoke job)")
@@ -79,8 +82,8 @@ def main() -> None:
     print(f"# meta,{','.join(f'{k}={v}' for k, v in out['_meta'].items())}",
           flush=True)
 
-    if (want("fig1") or want("fig2") or want("fig3") or want("kbit")
-            or want("shard")):
+    if (want("fig1") or want("fig2") or want("fig3") or want("pack")
+            or want("kbit") or want("shard")):
         from benchmarks import gemm_bench
         if want("fig1"):
             _emit("fig1_channels", gemm_bench.fig1_rows(args.smoke), out)
@@ -88,6 +91,8 @@ def main() -> None:
             _emit("fig2_filters", gemm_bench.fig2_rows(args.smoke), out)
         if want("fig3"):
             _emit("fig3_kernel", gemm_bench.fig3_rows(args.smoke), out)
+        if want("pack"):
+            _emit("pack_prologue", gemm_bench.pack_rows(args.smoke), out)
         if want("kbit"):
             _emit("kbit_sweep", gemm_bench.kbit_rows(args.smoke), out)
         if want("shard"):
@@ -116,11 +121,14 @@ def main() -> None:
         print(f"wrote {args.json}", file=sys.stderr)
 
     if args.fail_on_mismatch:
-        # shard_sweep rows carry exact_match too (sharded == single-device)
-        rows = out.get("equivalence", []) + out.get("shard_sweep", [])
+        # shard_sweep rows carry exact_match too (sharded == single-device),
+        # and pack_prologue rows gate the fused quantize->pack kernels
+        # against the jnp reference
+        rows = (out.get("equivalence", []) + out.get("shard_sweep", [])
+                + out.get("pack_prologue", []))
         if not rows:
             print("--fail-on-mismatch: no gated rows were produced "
-                  "(include 'equiv' and/or 'shard' in --only)",
+                  "(include 'equiv', 'shard' and/or 'pack' in --only)",
                   file=sys.stderr)
             raise SystemExit(1)
         bad = [r for r in rows if not r.get("exact_match", True)]

@@ -77,7 +77,12 @@ def pack_planes(codes: jax.Array, bits: int) -> jax.Array:
     like the 1-bit operands (:func:`pack_bits`), so the k-bit GEMM kernels
     reuse the same word layout — tail bits of the last word are 0 in every
     plane, and AND against zero words contributes nothing (the k-bit path
-    needs no pad correction)."""
+    needs no pad correction).
+
+    On the serving hot path this jnp round trip only runs for WEIGHTS at
+    convert time: activations go through the fused one-pass Pallas
+    prologue (``kernels/pack_bits.quant_pack_planes_pallas``), which this
+    function is the bit-identity oracle for (the CI pack_prologue gate)."""
     codes = codes.astype(WORD_DTYPE)
     return jnp.stack(
         [pack_bits((codes >> jnp.uint32(i)) & jnp.uint32(1))

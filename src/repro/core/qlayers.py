@@ -17,7 +17,12 @@ Two execution paths per layer, switched by what the params pytree contains:
 Both paths share ONE epilogue (scale / Eq. 2 range map / bias / cast): the
 layer builds an :class:`~repro.kernels.dispatch.EpilogueSpec` from its
 :class:`QuantSpec` and ``dispatch.apply_epilogue`` applies it — that single
-implementation is what keeps the two paths bit-exact.
+implementation is what keeps the two paths bit-exact.  The packed path's
+activation side is symmetric: the layer builds a
+:class:`~repro.kernels.dispatch.PrologueSpec` (``prologue_from_spec``) and
+the dispatch layer runs the fused quantize->pack Pallas prologue (1-bit
+sign-pack, or the DoReFa plane-pack + code row-sums) — the layer never
+touches codes or packed words itself.
 
 Packed layout: ``w_packed`` is ``(d_out, Kw)`` — the *transposed* weight
 packed along the contraction axis, which is the layout the xnor GEMM wants
@@ -139,6 +144,7 @@ def _qdense_packed(
         ),
         w_bits=w_bits,
         a_bits=a_bits,
+        prologue=dispatch.prologue_from_spec(spec, config=config),
     )
     return call(x.astype(jnp.float32), params["w_packed"],
                 scale=params.get("scale"), bias=params.get("b"))
@@ -275,6 +281,7 @@ def _qconv_packed(
         ),
         w_bits=w_bits,
         a_bits=a_bits,
+        prologue=dispatch.prologue_from_spec(spec, config=config),
     )
     dot = call(cols, params["w_packed"], scale=params.get("scale"))
     return dot.reshape(n, oh, ow, c_out)

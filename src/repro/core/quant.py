@@ -104,7 +104,15 @@ def quantize_weight(w: jax.Array, bits: int) -> jax.Array:
 
 def act_codes(x: jax.Array, bits: int) -> jax.Array:
     """DoReFa activation codes: ``round(clip(x, 0, 1) * (2^bits - 1))`` as
-    uint32 in [0, 2^bits - 1].  ``quantize_act(x, bits) == codes / n``."""
+    uint32 in [0, 2^bits - 1].  ``quantize_act(x, bits) == codes / n``.
+
+    This function is also called INSIDE the fused quantize->pack Pallas
+    prologue (``kernels/pack_bits.quant_pack_planes_pallas``) on each VMEM
+    tile — pure elementwise jnp, so it traces in a kernel body — which is
+    what guarantees the fused serving prologue and this jnp reference
+    cannot drift.  Note x <= 0 (the dispatch layer's float pad value is
+    -1.0) maps to code 0: all plane bits 0, contributing nothing to the
+    plane GEMM or the row-sums."""
     n = float(2**bits - 1)
     return jnp.round(_act_unit(x) * n).astype(jnp.uint32)
 

@@ -63,6 +63,7 @@ def packed_gemm_pspecs(
     expert_axis: str | None = None,
     planes: bool = False,
     grouped: bool = False,
+    prologue: bool = False,
 ) -> GemmPartition:
     """The two tensor-parallel layouts of the packed GEMM — the Megatron
     pair, covering both MLP matmuls without resharding:
@@ -82,8 +83,23 @@ def packed_gemm_pspecs(
     ``a (ka, M, Kw)`` x ``w (kb, N, Kw)``; grouped adds a leading expert
     dim that partitions over ``expert_axis`` (expert parallelism — no
     collective on that axis, outputs stay expert-sharded).
+
+    ``prologue=True`` describes the fused-prologue form: the activation
+    operand is the (M, K) FLOAT tensor, quantized+packed INSIDE the
+    shard_map body (kernels/dispatch's ``shard-*`` ``from_float`` paths).
+    Its ``a`` spec is always 2-D — ``"k"`` partitions the float K
+    dimension (word-aligned by the dispatch layer so each shard's packed
+    slab equals the global words) — while ``w`` and ``out`` keep the
+    packed layouts above.  The grouped form has no prologue variant: its
+    float rows are routed and packed into expert buckets BEFORE the
+    shard_map (see dispatch.quant_gemm_grouped).
     """
     ea = expert_axis
+    if prologue and grouped:
+        raise ValueError(
+            "grouped packed GEMM has no prologue pspecs (expert buckets "
+            "are routed and packed before the shard_map body)"
+        )
     if layout == "n":
         if grouped:
             raise ValueError(
@@ -92,7 +108,8 @@ def packed_gemm_pspecs(
             )
         if planes:
             return GemmPartition(
-                a=P(None, None, None), w=P(None, axis, None),
+                a=P(None, None) if prologue else P(None, None, None),
+                w=P(None, axis, None),
                 out=P(None, axis), reduce_axis=None,
             )
         return GemmPartition(
@@ -114,7 +131,8 @@ def packed_gemm_pspecs(
         )
     if planes:
         return GemmPartition(
-            a=P(None, None, axis), w=P(None, None, axis),
+            a=P(None, axis) if prologue else P(None, None, axis),
+            w=P(None, None, axis),
             out=P(None, None), reduce_axis=axis,
         )
     return GemmPartition(

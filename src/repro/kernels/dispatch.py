@@ -5,11 +5,18 @@ Every packed contraction — dense, conv-im2col, and the MoE expert stack —
 funnels through this module, which owns the four concerns that used to be
 scattered across ``core/qlayers.py``, ``kernels/ops.py`` and ``nn/mlp.py``:
 
-1. **binarize + pack** of float activations (paper Fig. 1's "binarize
-   input" stage),
+1. the **fused activation prologue** (:class:`PrologueSpec`: the
+   quantize -> pack stage, paper Fig. 1's "binarize input") — every
+   backend DECLARES how its operands are prepared (``Backend.prologue``)
+   and the preparation runs as one Pallas VMEM pass
+   (``kernels/pack_bits.py``): 1-bit sign -> word-pack, or the fused
+   DoReFa clip -> codes -> bit-plane pack (plane stack + code row-sums in
+   a single pass — no jnp ``act_codes`` -> ``pack_planes`` HBM round
+   trip); ``qlayers`` builds specs via :func:`prologue_from_spec`,
 2. **backend selection** via a registry (``"vpu"``, ``"mxu"``, ``"xla"``;
    :func:`register_backend` adds more) plus a per-(M, N, Kw) tile-size
-   heuristic table (:func:`select_tiles`),
+   heuristic table (:func:`select_tiles`) with an optional measured
+   **autotuning cache** over it (:func:`autotune_tiles`),
 3. **pad-correction arithmetic** — each backend's exact-dot recovery from
    its raw kernel output (``k_true - 2·mismatch`` for popcount, padded-dot
    minus pad bits for the MXU unpack kernel),
@@ -20,28 +27,31 @@ scattered across ``core/qlayers.py``, ``kernels/ops.py`` and ``nn/mlp.py``:
 
 Backend registry (the full bit-width family the paper names in §2.1 —
 1-bit XNOR plus DoReFa k-bit; :func:`resolve_backend` maps a base name +
-the layer's weight bit width onto the entry that executes it):
+the layer's weight bit width onto the entry that executes it; the
+``prologue`` column is each entry's declared activation preparation, see
+:class:`PrologueSpec`):
 
-===========  ==================  ==========================  ================
-backend      operands            kernel                      pad correction
-===========  ==================  ==========================  ================
-``vpu``      1-bit packed words  xnor+popcount (VPU,         ``k_true - 2*
-             (M, Kw)/(N, Kw)     Listing 3)                  mismatch``
-``mxu``      1-bit packed words  unpack->int8 in VMEM, MXU   ``- (Kw*32 -
-                                 dot                         k_true)``
-``xla``      float acts + any    unpack/dequant in-graph,    none (dequant
-             packed weights      XLA dot / ragged_dot (the   path)
-                                 dry-run lowering target)
-``vpu-k2``   2-bit plane stacks  2^(i+j)-weighted AND        none (AND with
-             (2, M, Kw)          popcount planes             zero pad words)
-``vpu-k4``   4-bit plane stacks  same kernel, 16 plane       none
-             (4, M, Kw)          pairs
-``vpu-k8``   8-bit plane stacks  same kernel, 64 plane       none
-             (8, M, Kw)          pairs
-``shard-*``  same as the inner   inner kernel under          on the reduced
-             backend, mesh-      shard_map: Kw-partial raw   sum, ONCE (see
-             partitioned         outputs + int32 psum        below)
-===========  ==================  ==========================  ================
+===========  ==================  ======================  ==========  ========
+backend      operands            kernel                  pad corr.   prologue
+===========  ==================  ======================  ==========  ========
+``vpu``      1-bit packed words  xnor+popcount (VPU,     ``k_true -  sign ->
+             (M, Kw)/(N, Kw)     Listing 3)              2*mism.``   pack
+``mxu``      1-bit packed words  unpack->int8 in VMEM,   ``-(Kw*32   sign ->
+                                 MXU dot                 -k_true)``  pack
+``xla``      float acts + any    unpack/dequant in-      none        float
+             packed weights      graph, XLA dot /                    (none)
+                                 ragged_dot (dry-run)
+``vpu-k2``   2-bit plane stacks  2^(i+j)-weighted AND    none (AND   fused
+             (2, M, Kw)          popcount planes         w/ zero     planes
+                                                         pad words)  + T
+``vpu-k4``   4-bit plane stacks  same kernel, 16 plane   none        planes
+             (4, M, Kw)          pairs                               + T
+``vpu-k8``   8-bit plane stacks  same kernel, 64 plane   none        planes
+             (8, M, Kw)          pairs                               + T
+``shard-*``  same as the inner   inner kernel under      on the      inner's,
+             backend, mesh-      shard_map: Kw-partial   reduced     INSIDE
+             partitioned         raw outputs + psum      sum, ONCE   the body
+===========  ==================  ======================  ==========  ========
 
 Other w_bits in 2..8 (w3/w5/w6/w7) convert + serve through the ``"xla"``
 dequant fallback; :func:`register_backend` can add ``vpu-k3`` etc.
@@ -59,10 +69,15 @@ additive over disjoint Kw slices); ``shard_layout="n"`` partitions weight
 rows with replicated activations and needs no collective).  Pad
 correction and the fused epilogue apply exactly once on the reduced sum,
 so sharded results are BIT-IDENTICAL to single-device at any split.  The
-grouped (MoE) form composes expert parallelism over
-``GemmConfig.expert_axis`` with the Kw partition.  :func:`unsharded`
-strips the family back to its inner single-device backend — required when
-a caller is already inside a ``shard_map`` body (nn/mlp.py's EP path).
+activation prologue runs INSIDE the shard_map body on float-activation
+entry points: the ``"k"`` layout word-aligns the float K split
+(``prologue=True`` pspecs) so each shard quantizes+packs only its local
+K-slab — no global-pack-then-reshard hop — and the ``"n"`` layout packs
+once and broadcasts the packed words.  The grouped (MoE) form composes
+expert parallelism over ``GemmConfig.expert_axis`` with the Kw partition.
+:func:`unsharded` strips the family back to its inner single-device
+backend — required when a caller is already inside a ``shard_map`` body
+(nn/mlp.py's EP path).
 
 Entry points:
 
@@ -106,7 +121,11 @@ from repro.kernels.kbit_gemm import (
     kbit_plane_gemm_batched_pallas,
     kbit_plane_gemm_pallas,
 )
-from repro.kernels.pack_bits import pack_sign_pallas
+from repro.kernels.pack_bits import (
+    _env_interpret,
+    pack_sign_pallas,
+    quant_pack_planes_pallas,
+)
 from repro.kernels.xnor_gemm import (
     mxu_pad_inflation,
     xnor_dot_mxu_batched_pallas,
@@ -116,10 +135,8 @@ from repro.kernels.xnor_gemm import (
 )
 
 WORD_BITS = bitpack.WORD_BITS
-
-
-def _env_interpret() -> bool:
-    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+# _env_interpret is shared with the pack kernels (repro.kernels.pack_bits)
+# so the two modules cannot drift on how REPRO_PALLAS_INTERPRET is read.
 
 
 # ---------------------------------------------------------------------------
@@ -175,7 +192,12 @@ def _chunk_for(bkw: int, want: int) -> int:
 
 @functools.lru_cache(maxsize=None)
 def select_tiles(m: int, n: int, kw: int, backend: str) -> TileConfig:
-    """Heuristic (M, N, Kw) -> tile sizes for ``backend`` (table-driven)."""
+    """(M, N, Kw) -> tile sizes for ``backend``: a measured autotune-cache
+    winner when one exists (:func:`autotune_tiles`), else the heuristic
+    table."""
+    tuned = _tuned_tiles().get((m, n, kw, backend))
+    if tuned is not None:
+        return tuned
     rule = _TILE_TABLE.get(backend, _TILE_TABLE["vpu"])
     bkw = _pick(kw, rule["kw"])
     return TileConfig(
@@ -184,6 +206,147 @@ def select_tiles(m: int, n: int, kw: int, backend: str) -> TileConfig:
         bkw=bkw,
         chunk_words=_chunk_for(bkw, _DEFAULT_CHUNK_WORDS),
     )
+
+
+# ---------------------------------------------------------------------------
+# Autotuning cache: measured winners persisted over the heuristic table.
+# ---------------------------------------------------------------------------
+
+_TUNED: dict[tuple[int, int, int, str], TileConfig] | None = None
+
+
+def _tile_cache_path() -> str:
+    return os.environ.get("REPRO_TILE_CACHE", "")
+
+
+def _tuned_tiles() -> dict[tuple[int, int, int, str], TileConfig]:
+    """The in-process autotune cache, seeded once from REPRO_TILE_CACHE
+    (a JSON file of ``"m,n,kw,backend" -> [bm, bn, bkw, chunk]``) when
+    set."""
+    global _TUNED
+    if _TUNED is None:
+        _TUNED = {}
+        path = _tile_cache_path()
+        if path and os.path.exists(path):
+            load_tile_cache(path)
+    return _TUNED
+
+
+def load_tile_cache(path: str) -> int:
+    """Load autotuned tile winners from ``path`` into the in-process cache
+    (entries win over the heuristic table).  Returns the entry count."""
+    import json
+
+    global _TUNED
+    if _TUNED is None:
+        _TUNED = {}
+    with open(path) as f:
+        raw = json.load(f)
+    for key, vals in raw.items():
+        m, n, kw, backend = key.rsplit(",", 3)[0:4]
+        _TUNED[(int(m), int(n), int(kw), backend)] = TileConfig(
+            int(vals[0]), int(vals[1]), int(vals[2]), int(vals[3]))
+    select_tiles.cache_clear()
+    return len(raw)
+
+
+def _save_tile_cache(path: str) -> None:
+    import json
+
+    data = {
+        f"{m},{n},{kw},{backend}": [t.bm, t.bn, t.bkw, t.chunk_words]
+        for (m, n, kw, backend), t in (_TUNED or {}).items()
+    }
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+
+
+def _tile_candidates(m: int, n: int, kw: int, backend: str):
+    """Candidate tiles around the heuristic pick: the heuristic itself,
+    the neighbouring row-tile steps, and the full K-word ladder — a small
+    set (<= ~2*2*4) so autotuning one shape stays cheap."""
+    rule = _TILE_TABLE.get(backend, _TILE_TABLE["vpu"])
+
+    def near(size: int, ladder: tuple[int, ...]):
+        i = ladder.index(_pick(size, ladder))
+        return sorted({ladder[i], ladder[min(i + 1, len(ladder) - 1)]})
+
+    for bm in near(m, rule["rows"]):
+        for bn in near(n, rule["rows"]):
+            for bkw in rule["kw"]:
+                yield TileConfig(bm=bm, bn=bn, bkw=bkw,
+                                 chunk_words=_chunk_for(
+                                     bkw, _DEFAULT_CHUNK_WORDS))
+
+
+def autotune_tiles(
+    m: int,
+    n: int,
+    kw: int,
+    backend: str = "vpu",
+    *,
+    iters: int = 2,
+    persist: bool = True,
+) -> TileConfig:
+    """Benchmark the tile candidates for one (M, N, Kw, backend) problem
+    and cache the winner over the heuristic table (the ROADMAP follow-on):
+    subsequent :func:`select_tiles` calls — and therefore every
+    ``GemmConfig`` without explicit tile overrides — use it.  With
+    ``persist`` and REPRO_TILE_CACHE set, winners survive the process in
+    the JSON file :func:`load_tile_cache` reads back.
+
+    ``backend`` is a REGISTRY entry name, and the kernel timed is that
+    entry's own (plane backends like ``"vpu-k4"`` time their k-bit plane
+    kernel — NOT the 1-bit kernel the name would down-resolve to).
+    ``shard-*`` names are rejected: sharded GEMMs re-select tiles from
+    their per-shard local shapes, so tune the inner backend at
+    (M, N, Kw_loc) instead."""
+    import time as _time
+
+    import numpy as np
+
+    if backend.startswith(_SHARD_PREFIX):
+        raise ValueError(
+            f"cannot autotune {backend!r}: shard backends select tiles "
+            "from their PER-SHARD shapes — tune the inner backend at the "
+            "local (M, N, Kw_loc) instead"
+        )
+    be = get_backend(backend)
+    rng = np.random.default_rng(0)
+    if be.bits > 1:
+        ap = jnp.asarray(
+            rng.integers(0, 2**32, (be.bits, m, kw), dtype=np.uint32))
+        bp = jnp.asarray(
+            rng.integers(0, 2**32, (be.bits, n, kw), dtype=np.uint32))
+    else:
+        ap = jnp.asarray(rng.integers(0, 2**32, (m, kw), dtype=np.uint32))
+        bp = jnp.asarray(rng.integers(0, 2**32, (n, kw), dtype=np.uint32))
+    k_true = kw * WORD_BITS
+    best: tuple[float, TileConfig] | None = None
+    for cand in _tile_candidates(m, n, kw, backend):
+        cfg = GemmConfig(backend=backend, bm=cand.bm, bn=cand.bn,
+                         bkw=cand.bkw, chunk_words=cand.chunk_words)
+
+        def run():
+            if be.bits > 1:
+                return be.gemm_kbit(ap, bp, cand, cfg)
+            return be.gemm(ap, bp, k_true, cand, cfg)
+
+        jax.block_until_ready(run())  # compile outside the timed region
+        t0 = _time.perf_counter()
+        for _ in range(iters):
+            out = run()
+        jax.block_until_ready(out)
+        dt = (_time.perf_counter() - t0) / iters
+        if best is None or dt < best[0]:
+            best = (dt, cand)
+    assert best is not None
+    _tuned_tiles()[(m, n, kw, backend)] = best[1]
+    select_tiles.cache_clear()
+    path = _tile_cache_path()
+    if persist and path:
+        _save_tile_cache(path)
+    return best[1]
 
 
 # ---------------------------------------------------------------------------
@@ -203,7 +366,22 @@ class GemmConfig:
     ``a_bits`` arguments on the entry points take precedence.
 
     ``interpret=None`` reads REPRO_PALLAS_INTERPRET (default: interpret,
-    the only mode available on this CPU container).
+    the only mode available on this CPU container).  The flag governs the
+    activation-prologue pack kernels too, not just the GEMM kernels.
+
+    ``fused_prologue`` selects the one-pass Pallas quantize->pack kernels
+    for activation preparation (kernels/pack_bits.py); ``False`` falls
+    back to the jnp reference path (``bitpack.pack_sign`` /
+    ``quant.act_codes`` -> ``bitpack.pack_planes``), kept as the
+    equivalence oracle the fused kernels are gated against.
+
+    ``capacity_factor`` bounds MoE expert buckets: the EP path in
+    nn/mlp.py sizes its per-shard ``expert_capacity`` as
+    ``capacity_factor x`` the balanced share (default 2.0 when unset) —
+    bounded-memory packed prefill.  When the bound shrinks the bucket
+    total below the row count, the grouped prologue routes first and
+    packs per expert bucket, so dropped rows are never quantized or
+    packed (see ``_pack_sign_buckets``).
 
     The ``shard-*`` backends additionally read the tensor-parallel knobs:
     ``mesh`` (the jax Mesh to shard_map over — hashable, so the config
@@ -226,6 +404,8 @@ class GemmConfig:
     shard_axis: str = "model"
     shard_layout: str = "k"
     expert_axis: str | None = None
+    fused_prologue: bool = True
+    capacity_factor: float | None = None
 
     def tiles(self, m: int, n: int, kw: int,
               backend: str | None = None) -> TileConfig:
@@ -300,6 +480,68 @@ def apply_epilogue(
     return y.astype(epilogue.out_dtype)
 
 
+@dataclasses.dataclass(frozen=True)
+class PrologueSpec:
+    """The activation-side twin of :class:`EpilogueSpec`: what happens to
+    float activations BEFORE the packed kernel runs (paper Fig. 1's
+    "binarize input" stage).  ``kind`` is the executing backend's declared
+    operand preparation (``Backend.prologue``):
+
+    * ``"pack_sign"``   — 1-bit: clip/sign -> packed uint32 words
+      (one fused Pallas pass, ``pack_bits.pack_sign_pallas``).
+    * ``"pack_planes"`` — k-bit DoReFa: clip -> Eq. 1 codes ->
+      (a_bits, M, Kw) bit-plane stack PLUS the int32 code row-sums T,
+      all in one fused pass (``pack_bits.quant_pack_planes_pallas``).
+    * ``"float"``       — operands stay float; the backend quantizes
+      in-graph (the ``"xla"`` dequant / dry-run lowering family).
+
+    ``fused=False`` routes through the jnp reference instead
+    (``bitpack.pack_sign`` / ``quant.act_codes`` + ``bitpack.pack_planes``)
+    — bit-identical by construction, kept as the equivalence oracle.
+
+    ``local=True`` marks prologues that run INSIDE the backend's
+    ``shard_map`` body (the ``shard-*`` family's ``"k"`` layout: each
+    shard quantizes+packs its word-aligned local K-slab, so no
+    global-pack-then-reshard hop exists; the ``"n"`` layout packs once
+    and broadcasts).
+    """
+
+    kind: str = "pack_sign"
+    a_bits: int = 1
+    fused: bool = True
+    local: bool = False
+
+
+def resolve_prologue(
+    name: str, w_bits: int, a_bits: int,
+    config: "GemmConfig" = None,  # type: ignore[assignment]
+) -> PrologueSpec:
+    """The prologue the (base backend name, bit widths, config) combination
+    implies — resolved against the same registry entry that will execute
+    the GEMM, so the declared operand prep cannot drift from the kernel."""
+    config = config if config is not None else DEFAULT_GEMM_CONFIG
+    be = get_backend(resolve_backend(name, w_bits))
+    return PrologueSpec(
+        kind=be.prologue,
+        a_bits=a_bits,
+        fused=config.fused_prologue,
+        local=(be.name.startswith(_SHARD_PREFIX)
+               and config.shard_layout == "k"),
+    )
+
+
+def prologue_from_spec(
+    qspec: QuantSpec, *, config: "GemmConfig" = None,  # type: ignore
+) -> PrologueSpec:
+    """Map a layer's :class:`QuantSpec` + its :class:`GemmConfig` to the
+    activation prologue the packed path runs (twin of
+    :func:`epilogue_from_spec`)."""
+    config = config if config is not None else DEFAULT_GEMM_CONFIG
+    wb = 1 if qspec.is_fp else qspec.w_bits
+    ab = 1 if qspec.is_fp else qspec.a_bits
+    return resolve_prologue(config.backend, wb, ab, config)
+
+
 # ---------------------------------------------------------------------------
 # Backend registry
 # ---------------------------------------------------------------------------
@@ -321,9 +563,16 @@ class Backend:
     ``gemm_grouped(buckets, w_stack, k_true, tiles, config)`` contracts
     an (E, M, Kw) activation bucket against an (E, N, Kw) weight stack.
 
-    ``from_float``: optional shortcut taking raw float activations —
-    backends that never materialise packed activations (the XLA
-    unpack-and-MXU fallback) set it and skip the pack stage.
+    ``prologue`` declares how the backend's float operands are prepared
+    (the :class:`PrologueSpec` kind: ``"pack_sign"`` | ``"pack_planes"``
+    | ``"float"``) — the activation-side analogue of the pad-correction
+    declaration, resolved by :func:`resolve_prologue`.
+
+    ``from_float``: optional shortcut taking raw float activations
+    ``(x2, w_packed, k_true, config)`` — backends that never materialise
+    globally-packed activations set it: the XLA unpack-and-MXU fallback
+    (quantizes in-graph), and the ``shard-*`` family (quantize+pack runs
+    INSIDE the shard_map body on each shard's local K-slab).
 
     k-bit surface (``bits > 1`` plane backends, or the ``from_float_kbit``
     fallbacks on ``"xla"``):
@@ -335,10 +584,11 @@ class Backend:
     ``gemm_kbit_grouped(buckets, w_stack, tiles, config)`` is the
     (E, ka, M, Kw) x (E, kb, N, Kw) expert-batched version.
 
-    ``from_float_kbit(x2, w_planes, a_bits, w_bits, k_true)`` /
+    ``from_float_kbit(x2, w_planes, a_bits, w_bits, k_true, config)`` /
     ``from_float_kbit_grouped(x_sorted, w_stack, group_sizes, a_bits,
-    w_bits, k_true)`` return the fake-quant DoReFa dot directly from float
-    activations (the in-graph dequant path the dry-run lowers).
+    w_bits, k_true, config)`` return the fake-quant DoReFa dot directly
+    from float activations (the in-graph dequant path the dry-run lowers,
+    and the shard family's fused pack-inside-the-body path).
     """
 
     name: str
@@ -351,6 +601,7 @@ class Backend:
     gemm_kbit_grouped: Callable | None = None
     from_float_kbit: Callable | None = None
     from_float_kbit_grouped: Callable | None = None
+    prologue: str = "pack_sign"
 
 
 _REGISTRY: dict[str, Backend] = {}
@@ -538,12 +789,13 @@ def _xla_gemm(ap, bp, k_true, tiles, config):
     return ref.xnor_gemm_ref(ap, bp, k_true)
 
 
-def _xla_from_float(x2, w_packed, k_true):
+def _xla_from_float(x2, w_packed, k_true, config):
     """Weights stay bit-packed in HBM, unpack to ±1 in-graph and contract
     on the MXU with fp32 accumulation (exact for ±1 up to 2^24 terms).
     The popcount reference (ref.xnor_gemm_ref) stays the test oracle — its
     (M, N, Kw) intermediate is fine for tests but not for lowering
     1M-token prefill cells."""
+    del config
     w_pm1 = bitpack.unpack_sign(w_packed, k_true, jnp.bfloat16)  # (N, K)
     xq = jnp.where(x2 >= 0, 1.0, -1.0).astype(jnp.bfloat16)
     return jax.lax.dot_general(
@@ -553,10 +805,11 @@ def _xla_from_float(x2, w_packed, k_true):
     )
 
 
-def _xla_from_float_grouped(x_sorted, w_stack, group_sizes, k_true):
+def _xla_from_float_grouped(x_sorted, w_stack, group_sizes, k_true, config):
     """Ragged-dot lowering of the grouped GEMM: packed words unpack
     in-graph, then ``lax.ragged_dot`` — the shape the dry-run cost model
     understands (no per-expert bucketing materialised)."""
+    del config
     e, n, _ = w_stack.shape
     w_pm1 = bitpack.unpack_sign(w_stack, k_true, jnp.bfloat16)  # (E, N, K)
     w_ekn = jnp.transpose(w_pm1, (0, 2, 1))  # (E, K, N)
@@ -656,10 +909,11 @@ def _dequant_weight_planes(w_planes, k_true, w_bits):
     return (2.0 * codes.astype(jnp.float32) - nw) / nw
 
 
-def _xla_kbit_from_float(x2, w_planes, a_bits, w_bits, k_true):
+def _xla_kbit_from_float(x2, w_planes, a_bits, w_bits, k_true, config):
     """Weights stay plane-packed in HBM (k/32 of fp32 bytes), dequantized
     to fp32 in-graph and contracted on the MXU — the k-bit analogue of
     ``_xla_from_float`` and the shape the dry-run cost model lowers."""
+    del config
     wq = _dequant_weight_planes(w_planes, k_true, w_bits)  # (N, K)
     xq = quant.quantize_act(x2.astype(jnp.float32), a_bits)
     return jax.lax.dot_general(
@@ -670,9 +924,10 @@ def _xla_kbit_from_float(x2, w_planes, a_bits, w_bits, k_true):
 
 
 def _xla_kbit_from_float_grouped(x_sorted, w_stack, group_sizes, a_bits,
-                                 w_bits, k_true):
+                                 w_bits, k_true, config):
     """Ragged-dot lowering of the grouped k-bit GEMM (cf. the 1-bit
     ``_xla_from_float_grouped``)."""
+    del config
     wq = _dequant_weight_planes(w_stack, k_true, w_bits)  # (E, N, K)
     w_ekn = jnp.transpose(wq, (0, 2, 1))  # (E, K, N)
     xq = quant.quantize_act(x_sorted.astype(jnp.float32), a_bits)
@@ -852,6 +1107,106 @@ def _shard_kbit_gemm_grouped(buckets, w_stack, tiles, config):
     return s[:e]
 
 
+# --- shard-* fused prologue: quantize+pack INSIDE the shard_map body ------
+# Float-activation entry points route here (Backend.from_float*).  The
+# "k" layout word-aligns the float K split (each shard's slab is a whole
+# number of packed words), so the words each shard packs are EXACTLY the
+# global packed words of that slab and results stay bit-identical — but
+# the global-pack-then-reshard hop is gone: floats shard once, and only
+# local slabs are quantized+packed.  The "n" layout packs once (fused)
+# and broadcasts the packed words.  Float pad is -1.0: bit 0 at 1 bit,
+# code 0 after the DoReFa clip — zero words in both operands either way.
+
+
+def _kw_split(k_true: int, ns: int) -> tuple[int, int]:
+    """Word-aligned float K split over ``ns`` shards: returns (K-words per
+    shard, padded float K = ns * kw_loc * 32)."""
+    kw_pad = _round_up(bitpack.packed_width(k_true), ns)
+    return kw_pad // ns, kw_pad * WORD_BITS
+
+
+def _pad_k_float(x: jax.Array, k_pad: int) -> jax.Array:
+    pad = k_pad - x.shape[-1]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths, constant_values=-1.0)  # bit 0 / code 0
+
+
+def _shard_from_float(inner, x2, w_packed, k_true, config):
+    """1-bit tensor-parallel GEMM from float activations, prologue inside
+    the shard_map body (see the section comment)."""
+    mesh, axis, ns, _ = _shard_ctx(config, f"backend 'shard-{inner}'")
+    interp = config._interpret
+    fused = config.fused_prologue
+    if config.shard_layout == "n":
+        # column-parallel: pack ONCE (fused), broadcast packed words, and
+        # delegate to the packed-operand "n" branch (no collective)
+        xp = pack_activations(x2, use_pallas=fused, interpret=interp)
+        return _shard_gemm(inner, xp, w_packed, k_true, None, config)
+    m, n = x2.shape[0], w_packed.shape[0]
+    kw_loc, k_pad = _kw_split(k_true, ns)
+    x_p = _pad_k_float(x2, k_pad)
+    w_p = _pad_axis(w_packed, 1, ns)
+    part = packed_gemm_pspecs("k", axis, prologue=True)
+    t = config.tiles(m, n, kw_loc, backend=inner)
+    if inner == "vpu":
+
+        def body_vpu(a_loc, b_loc):
+            ap = pack_activations(a_loc, use_pallas=fused, interpret=interp)
+            return jax.lax.psum(_vpu_raw(ap, b_loc, t, interp),
+                                part.reduce_axis)
+
+        mism = shard_map(body_vpu, mesh=mesh, in_specs=(part.a, part.w),
+                         out_specs=part.out, check_vma=False)(x_p, w_p)
+        return k_true - 2 * mism
+
+    def body_mxu(a_loc, b_loc):
+        ap = pack_activations(a_loc, use_pallas=fused, interpret=interp)
+        dot, _ = _mxu_raw(ap, b_loc, t, interp)
+        return jax.lax.psum(dot, part.reduce_axis)
+
+    dot = shard_map(body_mxu, mesh=mesh, in_specs=(part.a, part.w),
+                    out_specs=part.out, check_vma=False)(x_p, w_p)
+    # every shard contracted round_up(kw_loc, bkw) words; correct ONCE
+    return dot - mxu_pad_inflation(ns * _round_up(kw_loc, t.bkw), k_true)
+
+
+def _shard_kbit_from_float(x2, w_planes, a_bits, w_bits, k_true, config):
+    """k-bit tensor-parallel DoReFa dot from float activations: the fused
+    quantize->plane-pack prologue runs inside the shard_map body ("k"
+    layout — raw S and the code row-sums T both psum exactly) or once
+    before it ("n"); the dequant rewrite runs once on the sums."""
+    mesh, axis, ns, _ = _shard_ctx(config, "backend 'shard-vpu-k*'")
+    _check_kbit_accumulator(k_true, a_bits, w_bits)
+    interp = config._interpret
+    fused = config.fused_prologue
+    kb, n = w_planes.shape[0], w_planes.shape[1]
+    m = x2.shape[0]
+    if config.shard_layout == "n":
+        planes, t_sum = pack_act_planes(x2, a_bits, fused=fused,
+                                        interpret=interp)
+        s = _shard_kbit_gemm(planes, w_planes, None, config)
+        return _kbit_dequant(s, t_sum, a_bits, w_bits)
+    kw_loc, k_pad = _kw_split(k_true, ns)
+    x_p = _pad_k_float(x2, k_pad)
+    w_p = _pad_axis(w_planes, 2, ns)
+    part = packed_gemm_pspecs("k", axis, planes=True, prologue=True)
+    t = config.tiles(m, n, kw_loc, backend=f"vpu-k{kb}")
+
+    def body(a_loc, b_loc):
+        planes_loc, t_loc = pack_act_planes(a_loc, a_bits, fused=fused,
+                                            interpret=interp)
+        s_loc = _vpu_kbit_gemm(planes_loc, b_loc, t, config)
+        return (jax.lax.psum(s_loc, part.reduce_axis),
+                jax.lax.psum(t_loc, part.reduce_axis))
+
+    s, t_sum = shard_map(body, mesh=mesh, in_specs=(part.a, part.w),
+                         out_specs=(part.out, part.out),
+                         check_vma=False)(x_p, w_p)
+    return _kbit_dequant(s, t_sum, a_bits, w_bits)
+
+
 def _kbit_only(*_args, **_kw):
     raise ValueError(
         "k-bit plane backends execute k-bit GEMMs only; call the entry "
@@ -859,8 +1214,10 @@ def _kbit_only(*_args, **_kw):
     )
 
 
-register_backend(Backend("vpu", _vpu_gemm, gemm_grouped=_vpu_gemm_grouped))
-register_backend(Backend("mxu", _mxu_gemm, gemm_grouped=_mxu_gemm_grouped))
+register_backend(Backend("vpu", _vpu_gemm, gemm_grouped=_vpu_gemm_grouped,
+                         prologue="pack_sign"))
+register_backend(Backend("mxu", _mxu_gemm, gemm_grouped=_mxu_gemm_grouped,
+                         prologue="pack_sign"))
 register_backend(
     Backend(
         "xla",
@@ -870,6 +1227,7 @@ register_backend(
         gemm_kbit=_xla_kbit_s,
         from_float_kbit=_xla_kbit_from_float,
         from_float_kbit_grouped=_xla_kbit_from_float_grouped,
+        prologue="float",
     )
 )
 for _k in (2, 4, 8):
@@ -880,6 +1238,7 @@ for _k in (2, 4, 8):
             bits=_k,
             gemm_kbit=_vpu_kbit_gemm,
             gemm_kbit_grouped=_vpu_kbit_gemm_grouped,
+            prologue="pack_planes",
         )
     )
 for _inner in ("vpu", "mxu"):
@@ -888,6 +1247,8 @@ for _inner in ("vpu", "mxu"):
             f"shard-{_inner}",
             functools.partial(_shard_gemm, _inner),
             gemm_grouped=functools.partial(_shard_gemm_grouped, _inner),
+            from_float=functools.partial(_shard_from_float, _inner),
+            prologue="pack_sign",
         )
     )
 for _k in (2, 4, 8):
@@ -898,12 +1259,15 @@ for _k in (2, 4, 8):
             bits=_k,
             gemm_kbit=_shard_kbit_gemm,
             gemm_kbit_grouped=_shard_kbit_gemm_grouped,
+            from_float_kbit=_shard_kbit_from_float,
+            prologue="pack_planes",
         )
     )
 
 
 # ---------------------------------------------------------------------------
-# Activation packing (paper Fig. 1's "binarize input" stage)
+# Activation prologue (paper Fig. 1's "binarize input" stage): the fused
+# quantize->pack entry points every backend's operand prep routes through.
 # ---------------------------------------------------------------------------
 
 
@@ -920,6 +1284,11 @@ def pack_activations(
     """Binarize+pack (M, K) float -> (M, ceil(K/32)) uint32.
 
     Rows are NOT padded (output keeps M); K tail bits are 0.
+    ``use_pallas=False`` is the jnp reference (``bitpack.pack_sign``) —
+    bit-identical, kept as the equivalence oracle (PrologueSpec.fused).
+    ``interpret=None`` reads REPRO_PALLAS_INTERPRET; callers on the
+    dispatch path thread ``GemmConfig.interpret`` so a real-TPU config
+    compiles the pack stage like the GEMM kernels.
     """
     m, k = x.shape
     kw = bitpack.packed_width(k)
@@ -931,9 +1300,43 @@ def pack_activations(
         ((0, _round_up(m, bm) - m), (0, _round_up(k, kb) - k)),
         constant_values=-1.0,  # negative pad -> bit 0
     )
-    it = interpret if interpret is not None else _env_interpret()
-    out = pack_sign_pallas(xp, bm=bm, bkw=bkw, interpret=it)
+    out = pack_sign_pallas(xp, bm=bm, bkw=bkw, interpret=interpret)
     return out[:m, :kw]
+
+
+@functools.partial(jax.jit, static_argnames=("a_bits", "bm", "bkw", "fused",
+                                             "interpret"))
+def pack_act_planes(
+    x: jax.Array,
+    a_bits: int,
+    *,
+    bm: int = 8,
+    bkw: int = 8,
+    fused: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """The k-bit activation prologue: (M, K) float ->
+    ``((a_bits, M, ceil(K/32)) uint32 planes, (M, 1) int32 code row-sums)``
+    in ONE fused Pallas pass (quantize -> plane-pack -> row-sum; the k-bit
+    analogue of :func:`pack_activations`).  ``fused=False`` is the jnp
+    reference round trip (``quant.act_codes`` -> ``bitpack.pack_planes``),
+    bit-identical by construction — the fused kernel calls the same
+    ``quant.act_codes`` on each tile."""
+    m, k = x.shape
+    kw = bitpack.packed_width(k)
+    if not fused:
+        codes = quant.act_codes(x, a_bits)  # (M, K) uint32
+        return (bitpack.pack_planes(codes, a_bits),
+                codes.astype(jnp.int32).sum(axis=-1, keepdims=True))
+    kb = bkw * WORD_BITS
+    xp = jnp.pad(
+        x,
+        ((0, _round_up(m, bm) - m), (0, _round_up(k, kb) - k)),
+        constant_values=-1.0,  # negative pad -> code 0 -> all plane bits 0
+    )
+    planes, t_sum = quant_pack_planes_pallas(xp, a_bits, bm=bm, bkw=bkw,
+                                             interpret=interpret)
+    return planes[:, :m, :kw], t_sum[:m]
 
 
 # ---------------------------------------------------------------------------
@@ -977,28 +1380,33 @@ def packed_kbit_gemm(
     return be.gemm_kbit(a_planes, b_planes, tiles, config)
 
 
-def _kbit_dot_from_float(x2, w_planes, *, k_true, config, w_bits, a_bits):
+def _kbit_dot_from_float(x2, w_planes, *, k_true, config, w_bits, a_bits,
+                         fused=True):
     """(M, K) float acts x (w_bits, N, Kw) plane-packed weights -> the
-    fake-quant DoReFa dot (M, N) fp32, pre-epilogue."""
+    fake-quant DoReFa dot (M, N) fp32, pre-epilogue.  The activation side
+    is the fused quantize->plane-pack prologue (:func:`pack_act_planes`) —
+    plane stack and the code row-sums T in one Pallas pass, no jnp
+    ``act_codes``/``pack_planes`` round trip."""
     name = resolve_backend(config.backend, w_bits)
     be = get_backend(name)
-    if be.from_float_kbit is not None:
-        return be.from_float_kbit(x2, w_planes, a_bits, w_bits, k_true)
     assert w_planes.ndim == 3 and w_planes.shape[0] == w_bits, (
         w_planes.shape, w_bits)
+    if be.from_float_kbit is not None:
+        return be.from_float_kbit(x2, w_planes, a_bits, w_bits, k_true,
+                                  config)
     _check_kbit_accumulator(k_true, a_bits, w_bits)
-    codes = quant.act_codes(x2, a_bits)  # (M, K) uint32
-    a_planes = bitpack.pack_planes(codes, a_bits)  # (ka, M, Kw)
+    a_planes, t_sum = pack_act_planes(
+        x2, a_bits, fused=fused, interpret=config._interpret
+    )  # (ka, M, Kw), (M, 1)
     tiles = config.tiles(x2.shape[0], w_planes.shape[1],
                          a_planes.shape[-1], backend=name)
     s = be.gemm_kbit(a_planes, w_planes, tiles, config)
-    t_sum = codes.astype(jnp.int32).sum(axis=-1)  # (M,)
-    return _kbit_dequant(s, t_sum[:, None], a_bits, w_bits)
+    return _kbit_dequant(s, t_sum, a_bits, w_bits)
 
 
 @functools.partial(
     jax.jit, static_argnames=("k_true", "config", "epilogue", "w_bits",
-                              "a_bits")
+                              "a_bits", "prologue")
 )
 def quant_gemm(
     x: jax.Array,  # (..., K) float activations
@@ -1011,15 +1419,19 @@ def quant_gemm(
     bias: jax.Array | None = None,
     w_bits: int | None = None,
     a_bits: int | None = None,
+    prologue: PrologueSpec | None = None,
 ) -> jax.Array:
-    """The quantized GEMM: quantize+pack x, packed GEMM against packed w,
-    fused epilogue.  Returns (..., N) in ``epilogue.out_dtype`` —
-    numerically identical to the fake-quant training path plus the same
-    epilogue (paper §2.2.2 invariant; ``sign(x) @ sign(W)`` at 1 bit, the
-    DoReFa Eq. 1 dot at k bits).
+    """The quantized GEMM: fused activation prologue (quantize+pack x),
+    packed GEMM against packed w, fused epilogue.  Returns (..., N) in
+    ``epilogue.out_dtype`` — numerically identical to the fake-quant
+    training path plus the same epilogue (paper §2.2.2 invariant;
+    ``sign(x) @ sign(W)`` at 1 bit, the DoReFa Eq. 1 dot at k bits).
 
     ``w_bits``/``a_bits`` default to ``config.bits`` then 1; widths > 1
-    route to the bit-plane backends (see :func:`resolve_backend`)."""
+    route to the bit-plane backends (see :func:`resolve_backend`).
+    ``prologue`` (a :class:`PrologueSpec`, normally built by
+    :func:`prologue_from_spec`) selects the fused Pallas quantize->pack
+    kernels vs the jnp reference; None derives it from the config."""
     lead = x.shape[:-1]
     assert x.shape[-1] == k_true, (x.shape, k_true)
     x2 = x.reshape(-1, k_true)
@@ -1027,19 +1439,25 @@ def quant_gemm(
     ab = a_bits or config.bits or 1
     if wb > 1 or ab > 1:
         _check_kbit_widths(wb, ab)
+    fused = prologue.fused if prologue is not None else config.fused_prologue
+    if fused != config.fused_prologue:
+        # static-arg rewrite so backends that read the config (the shard
+        # family packs inside its shard_map body) honor the spec too
+        config = dataclasses.replace(config, fused_prologue=fused)
     if wb > 1:
         dot = _kbit_dot_from_float(
             x2, w_packed, k_true=k_true, config=config, w_bits=wb,
-            a_bits=ab,
+            a_bits=ab, fused=fused,
         )
         n_out = w_packed.shape[-2]
     else:
         name = resolve_backend(config.backend, 1)
         be = get_backend(name)
         if be.from_float is not None:
-            dot = be.from_float(x2, w_packed, k_true)
+            dot = be.from_float(x2, w_packed, k_true, config)
         else:
-            xp = pack_activations(x2, interpret=config._interpret)
+            xp = pack_activations(x2, use_pallas=fused,
+                                  interpret=config._interpret)
             tiles = config.tiles(xp.shape[0], w_packed.shape[0],
                                  xp.shape[1], backend=name)
             dot = be.gemm(xp, w_packed, k_true, tiles, config)
@@ -1054,15 +1472,16 @@ def quant_gemm(
 @dataclasses.dataclass(frozen=True)
 class QuantGemmCall:
     """A fully-specified quantized GEMM: shape contract + bit widths +
-    backend config + fused epilogue.  Layers build one of these and apply
-    it; everything else (packing, tiles, backend resolution, pad
-    correction, epilogue order) is owned here."""
+    backend config + fused prologue + fused epilogue.  Layers build one of
+    these and apply it; everything else (quantize+pack, tiles, backend
+    resolution, pad correction, epilogue order) is owned here."""
 
     k_true: int
     config: GemmConfig = DEFAULT_GEMM_CONFIG
     epilogue: EpilogueSpec = EpilogueSpec()
     w_bits: int = 1
     a_bits: int = 1
+    prologue: PrologueSpec | None = None
 
     def __call__(
         self,
@@ -1076,6 +1495,7 @@ class QuantGemmCall:
             x, w_packed, k_true=self.k_true, config=self.config,
             epilogue=self.epilogue, scale=scale, bias=bias,
             w_bits=self.w_bits, a_bits=self.a_bits,
+            prologue=self.prologue,
         )
 
 
@@ -1156,17 +1576,16 @@ def quant_gemm_grouped(
         outs = tuple(
             jnp.where(
                 valid[:, None],
-                be.from_float_grouped(x_sorted, w, group_sizes, k_true),
+                be.from_float_grouped(x_sorted, w, group_sizes, k_true,
+                                      config),
                 0,
             ).astype(out_dtype)
             for w in stacks
         )
         return outs if isinstance(w_stack, tuple) else outs[0]
 
-    xp = pack_activations(x_sorted, interpret=config._interpret)
-    kw = xp.shape[1]
-    buckets = jnp.zeros((e, ec, kw), jnp.uint32)
-    buckets = buckets.at[g, pos].set(xp, mode="drop")
+    buckets = _pack_sign_buckets(x_sorted, g, pos, e, ec, config)
+    kw = buckets.shape[-1]
 
     tiles = config.tiles(ec, n, kw, backend=name)
     outs = []
@@ -1178,13 +1597,70 @@ def quant_gemm_grouped(
     return tuple(outs) if isinstance(w_stack, tuple) else outs[0]
 
 
+def _pack_sign_buckets(x_sorted, g, pos, e, ec, config):
+    """The grouped 1-bit prologue: route rows into (E, capacity, Kw)
+    packed buckets.  When the capacity bound shrinks the bucket total
+    below the row count (E * ec < T — a tight ``expert_capacity``) the
+    FLOAT rows are routed first and only the kept bucket rows run through
+    the fused pack kernel — rows dropped by the capacity bound are never
+    quantized or packed (float bucket slack is -1.0: bit 0), and the pack
+    kernel sees strictly fewer rows.  Otherwise routing first would
+    quantize MORE rows than it saves (and scatter 32x the bytes), so the
+    T rows pack once and the packed words scatter."""
+    t, k = x_sorted.shape
+    fused = config.fused_prologue
+    interp = config._interpret
+    if e * ec < t:
+        xb = jnp.full((e, ec, k), -1.0, x_sorted.dtype)
+        xb = xb.at[g, pos].set(x_sorted, mode="drop")
+        xp = pack_activations(xb.reshape(e * ec, k), use_pallas=fused,
+                              interpret=interp)
+        return xp.reshape(e, ec, -1)
+    xp = pack_activations(x_sorted, use_pallas=fused, interpret=interp)
+    buckets = jnp.zeros((e, ec, xp.shape[1]), jnp.uint32)
+    return buckets.at[g, pos].set(xp, mode="drop")
+
+
+def _pack_plane_buckets(x_sorted, a_bits, g, g_safe, pos, e, ec, config):
+    """Grouped k-bit prologue: fused quantize->plane-pack, bucketed.
+    Returns ``((E, ka, capacity, Kw) uint32 buckets, (T, 1) int32 per-row
+    code sums T)`` — the same route-first rule as the 1-bit form (only
+    when E * ec < T, where routing first strictly shrinks the pack; rows
+    dropped by the capacity bound are then never quantized; -1.0 slack
+    rows quantize to code 0)."""
+    t, k = x_sorted.shape
+    fused = config.fused_prologue
+    interp = config._interpret
+    if e * ec < t:
+        xb = jnp.full((e, ec, k), -1.0, x_sorted.dtype)
+        xb = xb.at[g, pos].set(x_sorted, mode="drop")
+        planes, ts = pack_act_planes(xb.reshape(e * ec, k), a_bits,
+                                     fused=fused, interpret=interp)
+        kw = planes.shape[-1]
+        buckets = jnp.moveaxis(planes.reshape(a_bits, e, ec, kw), 0, 1)
+        # per original row: its bucket cell's code sum (dropped/invalid
+        # rows read a clamped cell and are zeroed by the validity mask)
+        t_rows = ts.reshape(e, ec)[g_safe, jnp.minimum(pos, ec - 1)]
+        return buckets, t_rows[:, None]
+    planes, ts = pack_act_planes(x_sorted, a_bits, fused=fused,
+                                 interpret=interp)  # (ka, T, Kw), (T, 1)
+    kw = planes.shape[-1]
+    buckets = jnp.zeros((e, ec, a_bits, kw), jnp.uint32)
+    buckets = buckets.at[g, pos].set(
+        jnp.moveaxis(planes, 0, 1), mode="drop"
+    )
+    return jnp.moveaxis(buckets, 2, 1), ts  # (E, ka, ec, kw)
+
+
 def _kbit_grouped(x_sorted, w_stack, stacks, group_sizes, g, g_safe, pos,
                   valid, *, ec, k_true, config, out_dtype, w_bits, a_bits):
-    """k-bit arm of :func:`quant_gemm_grouped`: activation codes are
-    quantized, plane-packed and bucketed ONCE, then each (E, w_bits, N, Kw)
-    expert plane stack contracts on the expert-batched plane kernel; the
-    ``"xla"`` fallback lowers to ``lax.ragged_dot`` over dequantized
-    weights.  Same capacity/validity contract as the 1-bit arm."""
+    """k-bit arm of :func:`quant_gemm_grouped`: the fused quantize->
+    plane-pack prologue runs ONCE (per expert bucket when a capacity
+    bound is set — see :func:`_pack_plane_buckets`), then each
+    (E, w_bits, N, Kw) expert plane stack contracts on the expert-batched
+    plane kernel; the ``"xla"`` fallback lowers to ``lax.ragged_dot`` over
+    dequantized weights.  Same capacity/validity contract as the 1-bit
+    arm."""
     e = stacks[0].shape[0]
     n = stacks[0].shape[-2]
     name = resolve_backend(config.backend, w_bits)
@@ -1195,7 +1671,7 @@ def _kbit_grouped(x_sorted, w_stack, stacks, group_sizes, g, g_safe, pos,
             jnp.where(
                 valid[:, None],
                 be.from_float_kbit_grouped(x_sorted, w, group_sizes,
-                                           a_bits, w_bits, k_true),
+                                           a_bits, w_bits, k_true, config),
                 0,
             ).astype(out_dtype)
             for w in stacks
@@ -1203,22 +1679,16 @@ def _kbit_grouped(x_sorted, w_stack, stacks, group_sizes, g, g_safe, pos,
         return outs if isinstance(w_stack, tuple) else outs[0]
 
     _check_kbit_accumulator(k_true, a_bits, w_bits)
-    codes = quant.act_codes(x_sorted, a_bits)  # (T, K) uint32
-    planes = bitpack.pack_planes(codes, a_bits)  # (ka, T, Kw)
-    kw = planes.shape[-1]
-    buckets = jnp.zeros((e, ec, a_bits, kw), jnp.uint32)
-    buckets = buckets.at[g, pos].set(
-        jnp.moveaxis(planes, 0, 1), mode="drop"
-    )
-    buckets = jnp.moveaxis(buckets, 2, 1)  # (E, ka, ec, kw)
+    buckets, t_sum = _pack_plane_buckets(x_sorted, a_bits, g, g_safe, pos,
+                                         e, ec, config)
+    kw = buckets.shape[-1]
 
     tiles = config.tiles(ec, n, kw, backend=name)
-    t_sum = codes.astype(jnp.int32).sum(axis=-1)  # (T,)
     outs = []
     for w in stacks:
         s = be.gemm_kbit_grouped(buckets, w, tiles,
                                  config)  # (E, ec, N)
         y = s[g_safe, jnp.minimum(pos, ec - 1)]
-        dot = _kbit_dequant(y, t_sum[:, None], a_bits, w_bits)
+        dot = _kbit_dequant(y, t_sum, a_bits, w_bits)
         outs.append(jnp.where(valid[:, None], dot, 0).astype(out_dtype))
     return tuple(outs) if isinstance(w_stack, tuple) else outs[0]

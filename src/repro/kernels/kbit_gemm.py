@@ -3,10 +3,14 @@ serving path, executed as bit-plane popcount GEMM.
 
 A k-bit unsigned code ``n = sum_i 2^i b_i`` splits into k bit planes, each
 packed into uint32 words exactly like the 1-bit operands
-(``core/bitpack.pack_planes``).  The integer GEMM of activation codes
-``n_a`` against weight codes ``n_w`` then decomposes into per-plane-pair
-AND+popcount passes (the daBNN-style generalization of the paper's
-xnor+popcount Listing 3):
+(``core/bitpack.pack_planes`` for weights at convert time; activations
+arrive through the FUSED quantize->plane-pack prologue,
+``kernels/pack_bits.quant_pack_planes_pallas``, which also emits the code
+row-sums T below — the serving hot path never materializes the (M, K)
+code tensor).  The integer GEMM of activation codes ``n_a`` against
+weight codes ``n_w`` then decomposes into per-plane-pair AND+popcount
+passes (the daBNN-style generalization of the paper's xnor+popcount
+Listing 3):
 
     S[m, n] = sum_{i < ka, j < kb} 2^(i+j) * popcount(A_i[m] & B_j[n])
 
@@ -27,6 +31,10 @@ disjoint Kw slices sums exactly (integer adds; zero pad words introduced
 by a split contribute 0), so the tensor-parallel ``shard-vpu-k*`` dispatch
 backends partition Kw across mesh shards and ``psum`` the per-shard S with
 no correction term anywhere — the dequant rewrite runs once on the sum.
+The row-sums T are K-partial-safe for the same reason (integer sums of
+codes over disjoint K slabs; pad floats quantize to code 0), which is what
+lets the shard family run the fused quantize->pack prologue INSIDE its
+shard_map body and psum (S, T) pairs.
 
 int32 accumulator bound: ``S <= K * Na * Nw``, and the dequant numerator
 ``2S - Nw*T`` doubles it — dispatch rejects ``2 * K * Na * Nw >= 2^31``

@@ -29,14 +29,17 @@ WORD_BITS = bitpack.WORD_BITS
 
 
 def pack_activations(
-    x: jax.Array, *, bm: int = 8, bkw: int = 8, backend: str = "pallas"
+    x: jax.Array, *, bm: int = 8, bkw: int = 8, backend: str = "pallas",
+    interpret: bool | None = None
 ) -> jax.Array:
     """Binarize+pack (M, K) float -> (M, ceil(K/32)) uint32.
 
     Rows are NOT padded (output keeps M); K tail bits are 0.
+    ``interpret=None`` reads REPRO_PALLAS_INTERPRET (dispatch threads
+    ``GemmConfig.interpret`` through the prologue on the layer path).
     """
     return dispatch.pack_activations(
-        x, bm=bm, bkw=bkw, use_pallas=backend != "xla"
+        x, bm=bm, bkw=bkw, use_pallas=backend != "xla", interpret=interpret
     )
 
 

@@ -1,31 +1,72 @@
-"""Pallas kernel: binarize (sign) + bit-pack along the last axis.
+"""Pallas kernels: the fused quantize -> pack activation prologue family.
 
 This is the "binarize input" stage the paper measures in Figure 1
 (``binarize input and xnor_64_omp``): activations arrive as floats and must
-be packed before the xnor GEMM.  One fused VMEM pass: read a (bm, bkw*32)
-float tile, emit a (bm, bkw) uint32 tile.
+be quantized and packed before the packed GEMM.  daBNN (Zhang et al., 2019)
+attributes most of its speedup to fusing exactly this stage into the GEMM's
+data path instead of running it as separate HBM round-trips — the same
+argument applies here, so every member of the family is ONE VMEM pass:
+
+``pack_sign_pallas``
+    1-bit: read a (bm, bkw*32) float tile, emit a (bm, bkw) uint32 tile of
+    sign bits (x >= 0 -> bit 1, the core/bitpack.py convention).
+
+``quant_pack_planes_pallas``
+    k-bit (DoReFa Eq. 1): read the same float tile, quantize to integer
+    codes via ``quant.act_codes`` (clip to [0, 1], scale, round — called
+    directly so the kernel CANNOT drift from the fake-quant train path),
+    split into ``a_bits`` bit planes and word-pack each, emitting a
+    (a_bits, bm, bkw) plane-stack tile PLUS the int32 code row-sums T the
+    dequant rewrite ``(2S - Nw*T)/(Na*Nw)`` needs — so the jnp
+    ``act_codes`` -> ``pack_planes`` round trip (three full HBM passes)
+    never materializes the (M, K) code tensor.
+
+Both kernels require pre-padded inputs (M to bm, K to bkw*32); pad floats
+with a NEGATIVE value so pad bits are 0 (1-bit) / code 0 (k-bit) — zero in
+both GEMM operands, contributing nothing (see core/bitpack.py).
+
+``interpret=None`` reads REPRO_PALLAS_INTERPRET like the GEMM kernels —
+callers thread ``GemmConfig.interpret`` through ``kernels/dispatch`` so a
+real-TPU config compiles the pack stage too instead of silently
+interpreting it.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import quant
 from repro.core.bitpack import WORD_BITS
 
 DEFAULT_BM = 256
 DEFAULT_BKW = 32  # words per block: 32 * 32 = 1024 floats per row-block
 
 
+def _env_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    return interpret if interpret is not None else _env_interpret()
+
+
+def _pack_words(bits: jax.Array) -> jax.Array:
+    """(bm, n_words, 32) {0,1} uint32 -> (bm, n_words) packed words."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return (bits << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
 def _pack_kernel(x_ref, out_ref):
     x = x_ref[...]  # (bm, bkw * 32) float
     bm, kbits = x.shape
-    bits = (x >= 0).astype(jnp.uint32).reshape(bm, kbits // WORD_BITS, WORD_BITS)
-    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
-    out_ref[...] = (bits << shifts).sum(axis=-1, dtype=jnp.uint32)
+    bits = (x >= 0).astype(jnp.uint32).reshape(bm, kbits // WORD_BITS,
+                                               WORD_BITS)
+    out_ref[...] = _pack_words(bits)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bkw", "interpret"))
@@ -34,10 +75,11 @@ def pack_sign_pallas(
     *,
     bm: int = DEFAULT_BM,
     bkw: int = DEFAULT_BKW,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Returns (M, K/32) uint32.  Pad K with negative values (bit 0) first;
-    ops.py handles the padding so pad bits are 0 in both GEMM operands."""
+    dispatch.pack_activations handles the padding so pad bits are 0 in both
+    GEMM operands."""
     m, k = x.shape
     kb = bkw * WORD_BITS
     assert m % bm == 0 and k % kb == 0, (m, bm, k, kb)
@@ -48,5 +90,70 @@ def pack_sign_pallas(
         in_specs=[pl.BlockSpec((bm, kb), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((bm, bkw), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, k // WORD_BITS), jnp.uint32),
-        interpret=interpret,
+        interpret=_resolve_interpret(interpret),
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# k-bit: fused DoReFa quantize -> bit-plane pack (+ code row-sums)
+# ---------------------------------------------------------------------------
+
+
+def _quant_pack_planes_kernel(x_ref, planes_ref, tsum_ref, *, a_bits: int):
+    """One (bm, bkw*32) float tile -> (a_bits, bm, bkw) plane words and the
+    running int32 code row-sums (accumulated over the sequential K axis)."""
+    x = x_ref[...]  # (bm, bkw * 32) float
+    bm, kbits = x.shape
+    codes = quant.act_codes(x, a_bits)  # (bm, kbits) uint32 — Eq. 1 codes
+    cw = codes.reshape(bm, kbits // WORD_BITS, WORD_BITS)
+    for i in range(a_bits):
+        planes_ref[i, :, :] = _pack_words((cw >> jnp.uint32(i)) & jnp.uint32(1))
+
+    k_step = pl.program_id(1)
+
+    @pl.when(k_step == 0)
+    def _init():
+        tsum_ref[...] = jnp.zeros_like(tsum_ref)
+
+    tsum_ref[...] += codes.astype(jnp.int32).sum(axis=-1, keepdims=True)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("a_bits", "bm", "bkw", "interpret")
+)
+def quant_pack_planes_pallas(
+    x: jax.Array,  # (M, K) float, pre-padded (M % bm == 0, K % (bkw*32) == 0)
+    a_bits: int,
+    *,
+    bm: int = DEFAULT_BM,
+    bkw: int = DEFAULT_BKW,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused DoReFa activation prologue: quantize (clip -> codes) and
+    plane-pack in one VMEM pass.
+
+    Returns ``(planes, t_sum)``: an (a_bits, M, K/32) uint32 plane stack
+    (bit-identical to ``bitpack.pack_planes(quant.act_codes(x, a_bits))``)
+    and the (M, 1) int32 code row-sums.  Pad K with negative floats (code
+    0) so pad bits are 0 in every plane and contribute 0 to both the plane
+    GEMM and T."""
+    m, k = x.shape
+    kb = bkw * WORD_BITS
+    assert m % bm == 0 and k % kb == 0, (m, bm, k, kb)
+    assert 2 <= a_bits <= 8, a_bits
+    grid = (m // bm, k // kb)  # K innermost: sequential row-sum accumulation
+    kernel = functools.partial(_quant_pack_planes_kernel, a_bits=a_bits)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, kb), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((a_bits, bm, bkw), lambda i, j: (0, i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((a_bits, m, k // WORD_BITS), jnp.uint32),
+            jax.ShapeDtypeStruct((m, 1), jnp.int32),
+        ],
+        interpret=_resolve_interpret(interpret),
     )(x)

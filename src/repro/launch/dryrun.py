@@ -212,7 +212,9 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
              quant: str, outdir: str | None,
              seq_parallel: bool = False,
              microbatch: int | None = None,
-             gemm_backend: str = "xla") -> dict:
+             gemm_backend: str = "xla",
+             fused_prologue: bool = True,
+             capacity_factor: float | None = None) -> dict:
     spec = registry.get(arch_id)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -236,9 +238,13 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
     # mode is not a meaningful cost-analysis target (see kernels/dispatch).
     # --gemm-backend shard-* lowers the tensor-parallel packed GEMM instead
     # (shard_map over this cell's 'model' axis) — proving the sharded
-    # serving graph partitions coherently at production mesh sizes.
+    # serving graph (activation prologue inside the shard_map body
+    # included) partitions coherently at production mesh sizes.
     ctx = QCtx(policy=policy, compute_dtype=jnp.bfloat16,
-               gemm_config=GemmConfig(backend=gemm_backend), mesh=mesh)
+               gemm_config=GemmConfig(backend=gemm_backend,
+                                      fused_prologue=fused_prologue,
+                                      capacity_factor=capacity_factor),
+               mesh=mesh)
     rs = Resolver(mesh)
 
     def lower_cell(scan_blocks: bool):
@@ -398,6 +404,12 @@ def main() -> None:
                     help="dispatch backend the cell lowers (default the "
                          "in-graph xla dequant path; shard-* lowers the "
                          "tensor-parallel packed GEMM on the cell's mesh)")
+    ap.add_argument("--jnp-prologue", action="store_true",
+                    help="lower the jnp reference quantize->pack path "
+                         "instead of the fused Pallas prologue")
+    ap.add_argument("--capacity-factor", type=float, default=None,
+                    help="MoE expert-capacity factor for the EP path "
+                         "(bounded-memory packed prefill; default 2.0)")
     ap.add_argument("--seq-parallel", action="store_true",
                     help="Megatron-SP residual sharding (train cells)")
     ap.add_argument("--microbatch", type=int, default=None,
@@ -423,7 +435,9 @@ def main() -> None:
                            quant=args.quant, outdir=args.out,
                            seq_parallel=args.seq_parallel,
                            microbatch=args.microbatch,
-                           gemm_backend=args.gemm_backend)
+                           gemm_backend=args.gemm_backend,
+                           fused_prologue=not args.jnp_prologue,
+                           capacity_factor=args.capacity_factor)
             print(_fmt(rec), flush=True)
         except Exception as e:  # a failed cell is a bug in the system
             failures += 1

@@ -67,7 +67,17 @@ def main() -> None:
     ap.add_argument("--shard-layout", default="k", choices=["k", "n"],
                     help="shard-* operand layout: 'k' partitions the "
                          "packed contraction (Kw-partial popcount + "
-                         "psum), 'n' partitions weight output rows")
+                         "psum; activations quantize+pack INSIDE the "
+                         "shard_map body), 'n' partitions weight output "
+                         "rows (acts pack once and broadcast)")
+    ap.add_argument("--jnp-prologue", action="store_true",
+                    help="use the jnp reference quantize->pack path "
+                         "instead of the fused Pallas prologue kernels "
+                         "(the equivalence oracle; slower)")
+    ap.add_argument("--capacity-factor", type=float, default=None,
+                    help="MoE expert-capacity factor over the balanced "
+                         "share for the EP path (default 2.0); overflow "
+                         "rows drop and are never quantized or packed")
     ap.add_argument("--prompts", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -86,7 +96,9 @@ def main() -> None:
               f"(layout {args.shard_layout!r})")
     ctx = QCtx(policy=policy, compute_dtype=jnp.float32, mesh=mesh,
                gemm_config=GemmConfig(backend=args.xnor_backend,
-                                      shard_layout=args.shard_layout))
+                                      shard_layout=args.shard_layout,
+                                      fused_prologue=not args.jnp_prologue,
+                                      capacity_factor=args.capacity_factor))
 
     key = jax.random.PRNGKey(args.seed)
     if spec.family == "lm":

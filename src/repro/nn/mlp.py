@@ -241,8 +241,14 @@ def moe_apply(
         for a in dp:
             n_dp *= dict(mesh.shape)[a]
         t_loc = t // n_dp if t % n_dp == 0 else t
-        # 2x load-balance slack over the balanced share (capacity drop)
-        cap = min(max(2 * t_loc * cfg.top_k // msize, 64), t_loc * cfg.top_k)
+        # capacity_factor x load-balance slack over the balanced share
+        # (GemmConfig.capacity_factor, default 2.0) — overflow rows drop,
+        # and the grouped prologue never quantizes/packs dropped rows
+        cf = ctx.gemm_config.capacity_factor
+        cf = 2.0 if cf is None else cf  # explicit 0.0 must not mean unset
+        # (the 64-row floor below still applies at tiny factors)
+        cap = min(max(int(cf * t_loc * cfg.top_k) // msize, 64),
+                  t_loc * cfg.top_k)
 
         # inside the EP shard_map body the GEMMs must run single-device:
         # a shard-* backend would nest a second shard_map over the same

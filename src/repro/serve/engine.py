@@ -21,7 +21,12 @@ Tensor-parallel serving: configure a ``shard-*`` backend (e.g.
 ``GemmConfig.mesh``, or ``QCtx.mesh``) and every packed GEMM runs under
 ``shard_map`` with the packed K dimension partitioned across devices —
 bit-identical logits to the single-device engine (the Kw-partial popcount
-psums exactly; see kernels/dispatch.py).
+psums exactly; see kernels/dispatch.py).  The activation prologue
+(quantize+pack, Fig. 1's "binarize input") is dispatch-owned too: one
+fused Pallas pass per GEMM, running INSIDE the shard_map body on the
+``"k"`` layout — ``GemmConfig.fused_prologue=False`` swaps in the jnp
+reference path for A/B checks, and ``GemmConfig.capacity_factor`` bounds
+MoE expert buckets (dropped rows are never quantized or packed).
 """
 
 from __future__ import annotations
@@ -48,11 +53,12 @@ class EngineConfig:
     cache_len: int
     max_new_tokens: int = 32
     temperature: float = 0.0  # 0 = greedy
-    # per-engine override of how quantized GEMMs execute (backend + tiles);
-    # None inherits the QCtx's gemm_config.  Tensor-parallel serving picks
-    # a `shard-*` backend here (or on the QCtx) — the shard mesh is `mesh`
-    # below when set (the per-engine override always wins), else the
-    # GemmConfig's own `mesh`, else the QCtx's mesh.
+    # per-engine override of how quantized GEMMs execute (backend + tiles
+    # + fused_prologue + capacity_factor); None inherits the QCtx's
+    # gemm_config.  Tensor-parallel serving picks a `shard-*` backend here
+    # (or on the QCtx) — the shard mesh is `mesh` below when set (the
+    # per-engine override always wins), else the GemmConfig's own `mesh`,
+    # else the QCtx's mesh.
     gemm_config: GemmConfig | None = None
     # per-engine mesh override for shard-* backends / EP MoE layers
     mesh: Any = None

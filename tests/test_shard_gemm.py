@@ -204,6 +204,89 @@ def test_shard_grouped_capacity_drops_match(mesh_factory):
 
 
 # ---------------------------------------------------------------------------
+# fused prologue inside the shard_map body (the PR-4 refactor): float-
+# activation entry points must NOT pack globally and reshard — each shard
+# packs its own word-aligned K-slab
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("inner", ["vpu", "mxu"])
+def test_shard_k_layout_packs_inside_body(mesh_factory, inner, monkeypatch):
+    """On the "k" layout the pack kernel must only ever see LOCAL K-slabs
+    (K/ways floats), never the global K — proof the quantize+pack stage
+    moved inside the shard_map body."""
+    widths = []
+    real = dispatch.pack_activations
+
+    def spy(x, **kw):
+        widths.append(x.shape[-1])
+        return real(x, **kw)
+
+    monkeypatch.setattr(dispatch, "pack_activations", spy)
+    ways = 4
+    mesh = mesh_factory(ways)
+    m, k, n = 6, 8 * 32, 10  # Kw = 8: 2 words (64 floats) per shard
+    a, w = _mats(31, m, k, n)
+    wp = bitpack.pack_sign(w.T)
+    got = np.asarray(dispatch.quant_gemm(
+        a, wp, k_true=k,
+        config=GemmConfig(backend=f"shard-{inner}", mesh=mesh)))
+    assert widths and max(widths) == k // ways  # local slabs only
+    np.testing.assert_array_equal(
+        got, np.asarray(ref.sign_gemm_ref(a, w)).astype(np.int32))
+
+
+def test_shard_kbit_k_layout_packs_inside_body(mesh_factory, monkeypatch):
+    """Same invariant for the fused k-bit plane prologue (S and the code
+    row-sums T both psum from local slabs)."""
+    ways = 2
+    mesh = mesh_factory(ways)
+    m, k, n = 5, 6 * 32, 7
+    a, w = _mats(33, m, k, n)
+    wp = bitpack.pack_planes(quant.weight_codes(w.T, 4), 4)
+    want = np.asarray(dispatch.quant_gemm(
+        a, wp, k_true=k, config=GemmConfig(backend="vpu"),
+        w_bits=4, a_bits=4))
+
+    widths = []
+    real = dispatch.pack_act_planes
+
+    def spy(x, a_bits, **kw):
+        widths.append(x.shape[-1])
+        return real(x, a_bits, **kw)
+
+    monkeypatch.setattr(dispatch, "pack_act_planes", spy)
+    got = np.asarray(dispatch.quant_gemm(
+        a, wp, k_true=k,
+        config=GemmConfig(backend="shard-vpu", mesh=mesh),
+        w_bits=4, a_bits=4))
+    assert widths and max(widths) == k // ways
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(k_true=st.integers(min_value=1, max_value=150),
+       ways=st.sampled_from([2, 4]),
+       inner=st.sampled_from(["vpu", "mxu"]))
+def test_shard_prologue_property(k_true, ways, inner):
+    """For ANY k_true (odd word tails, K smaller than the split, word
+    counts not divisible by ways) the float-activation shard path — local
+    word-aligned quantize+pack inside the body — returns the exact ±1 dot
+    (pad bits are 0 in both operands on every shard)."""
+    if len(jax.devices()) < ways:
+        pytest.skip(f"{ways}-way mesh needs virtual host devices")
+    mesh = jax.make_mesh((ways,), ("model",))
+    m, n = 3, 5
+    a, w = _mats(k_true * 5 + ways, m, k_true, n)
+    oracle = np.asarray(ref.sign_gemm_ref(a, w)).astype(np.int32)
+    wp = bitpack.pack_sign(w.T)
+    got = np.asarray(dispatch.quant_gemm(
+        a, wp, k_true=k_true,
+        config=GemmConfig(backend=f"shard-{inner}", mesh=mesh)))
+    np.testing.assert_array_equal(got, oracle)
+
+
+# ---------------------------------------------------------------------------
 # pad-correction property sweep (hypothesis; odd k_true on both paths)
 # ---------------------------------------------------------------------------
 

@@ -118,6 +118,16 @@ def test_gemm_pspecs_layouts():
     p = rs.gemm_pspecs("k", planes=True)
     assert p.a == P(None, None, "model")
 
+    # prologue form: the activation operand is the FLOAT (M, K) tensor,
+    # quantized+packed inside the shard_map body — its spec is 2-D with
+    # the K dim partitioned ("k") or replicated ("n"); w/out unchanged
+    kp = rs.gemm_pspecs("k", prologue=True)
+    assert kp.a == P(None, "model") and kp.w == k.w and kp.out == k.out
+    kpp = rs.gemm_pspecs("k", planes=True, prologue=True)
+    assert kpp.a == P(None, "model") and kpp.w == p.w
+    np_ = rs.gemm_pspecs("n", planes=True, prologue=True)
+    assert np_.a == P(None, None) and np_.reduce_axis is None
+
     # validation: unknown mesh axes / layouts raise at resolve time,
     # not deep inside shard_map
     with pytest.raises(ValueError, match="not on mesh"):
@@ -128,6 +138,8 @@ def test_gemm_pspecs_layouts():
         packed_gemm_pspecs("zigzag", "model")
     with pytest.raises(ValueError, match="no 'n' layout"):
         packed_gemm_pspecs("n", "model", grouped=True)
+    with pytest.raises(ValueError, match="no prologue"):
+        packed_gemm_pspecs("k", "model", grouped=True, prologue=True)
 
 
 def test_master_pspecs_does_not_double_log_demotions():
