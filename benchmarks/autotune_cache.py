@@ -1,0 +1,89 @@
+"""Autotune the dispatch tile table over the benchmark GEMM shapes and
+persist the winners — the committed ``benchmarks/tile_cache.json`` that
+CI's bench-smoke job points ``REPRO_TILE_CACHE`` at, so every gated run
+selects measured tiles instead of the heuristic table (the ROADMAP
+follow-on to the PR-4 autotuning cache).
+
+Shapes covered (the dispatch-routed GEMMs the smoke gate actually hits):
+
+* fig1 conv-mapped sweep (M=filters, K=k*k*Cin, N=batch*spatial^2) in its
+  --smoke form, 1-bit backends;
+* the kbit sweep / k-bit equivalence shapes, ``vpu-k{2,4,8}`` plane
+  backends;
+* the 1-bit equivalence spot-check shape.
+
+``--full`` adds the full-size fig1/kbit sweep shapes (slow on a CPU rig:
+the Pallas kernels autotune in interpret mode there — winners are only
+meaningful on real accelerators, but the cache plumbing is identical).
+
+Run:  PYTHONPATH=src python benchmarks/autotune_cache.py [--full]
+      [--out benchmarks/tile_cache.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+# a pre-set REPRO_TILE_CACHE (the CI setting) would otherwise seed the
+# in-process cache and silently merge stale entries into --out; this
+# script always regenerates from scratch.  Must happen before dispatch's
+# lazy _tuned_tiles() first runs.
+os.environ.pop("REPRO_TILE_CACHE", None)
+
+from repro.kernels import dispatch  # noqa: E402
+from repro.kernels.dispatch import WORD_BITS  # noqa: E402
+
+
+def _kw(k: int) -> int:
+    return (k + WORD_BITS - 1) // WORD_BITS
+
+
+def conv_shape(filters, kernel, channels, batch, spatial):
+    """The fig1-3 conv->GEMM mapping (benchmarks/gemm_bench.conv_gemm_row):
+    the packed GEMM runs (M=filters, N=batch*spatial^2, Kw=ceil(K/32))."""
+    return filters, batch * spatial * spatial, _kw(kernel * kernel * channels)
+
+
+def shapes(full: bool):
+    # fig1 --smoke sweep: filters=16, kernel=3, batch=16, spatial=2
+    for ch in (16, 32):
+        yield conv_shape(16, 3, ch, 16, 2), ("vpu", "mxu")
+    # kbit --smoke sweep + k-bit equivalence: (M, K, N) = (32, 288, 16)
+    yield (32, 16, _kw(288)), ("vpu", "mxu", "vpu-k2", "vpu-k4", "vpu-k8")
+    # k-bit equivalence row shape (32, 256, 24)
+    yield (32, 24, _kw(256)), ("vpu-k2", "vpu-k4", "vpu-k8")
+    # 1-bit equivalence spot check: (64, 512, 48)
+    yield (64, 48, _kw(512)), ("vpu", "mxu")
+    if full:
+        for ch in (64, 128, 256, 512):  # fig1 full: kernel=5, spatial=4
+            yield conv_shape(64, 5, ch, 200, 4), ("vpu", "mxu")
+        # kbit full sweep: (128, 2304, 64)
+        yield (128, 64, _kw(2304)), ("vpu-k2", "vpu-k4", "vpu-k8")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="benchmarks/tile_cache.json")
+    ap.add_argument("--full", action="store_true",
+                    help="also tune the full-size (non-smoke) sweep shapes")
+    ap.add_argument("--iters", type=int, default=2)
+    args = ap.parse_args()
+
+    for (m, n, kw), backends in shapes(args.full):
+        for backend in backends:
+            t0 = time.perf_counter()
+            win = dispatch.autotune_tiles(m, n, kw, backend,
+                                          iters=args.iters, persist=False)
+            dt = time.perf_counter() - t0
+            print(f"M={m:4d} N={n:4d} Kw={kw:3d} {backend:8s} -> "
+                  f"bm={win.bm} bn={win.bn} bkw={win.bkw} "
+                  f"chunk={win.chunk_words}  ({dt:.1f}s)")
+    dispatch._save_tile_cache(args.out)
+    n = len(dispatch._tuned_tiles())
+    print(f"wrote {n} entries to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

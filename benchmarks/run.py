@@ -17,6 +17,9 @@ BENCH files are comparable across PRs.
   accuracy    Table 1/2 accuracy mechanism (synthetic data; direction only)
   lm_sizes    beyond-paper: packed-weight accounting for the assigned pool
   equiv       §2.2.2 xnor==float + k-bit==DoReFa exactness spot check
+  serve       continuous-batching scheduler vs fixed-batch decode: the
+              greedy token-equivalence gate (per request, incl. the packed
+              engine) + the mixed-length early-eos throughput/TTFT row
 
 --smoke shrinks the swept shapes (the CI bench-smoke job);
 --fail-on-mismatch exits non-zero if any equivalence row disagrees with
@@ -65,7 +68,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig3,pack,kbit,shard,"
-                         "table1,table2,accuracy,lm_sizes,equiv")
+                         "table1,table2,accuracy,lm_sizes,equiv,serve")
     ap.add_argument("--json", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes (CI bench-smoke job)")
@@ -115,6 +118,10 @@ def main() -> None:
         from benchmarks import equiv_bench
         _emit("equivalence", equiv_bench.rows(args.smoke), out)
 
+    if want("serve"):
+        from benchmarks import serve_bench
+        _emit("serve", serve_bench.rows(args.smoke), out)
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)
@@ -122,14 +129,16 @@ def main() -> None:
 
     if args.fail_on_mismatch:
         # shard_sweep rows carry exact_match too (sharded == single-device),
-        # and pack_prologue rows gate the fused quantize->pack kernels
-        # against the jnp reference
+        # pack_prologue rows gate the fused quantize->pack kernels against
+        # the jnp reference, and serve equivalence rows gate continuous-
+        # batching greedy tokens against the per-request fixed-batch engine
+        # (throughput rows carry no exact_match and pass through)
         rows = (out.get("equivalence", []) + out.get("shard_sweep", [])
-                + out.get("pack_prologue", []))
+                + out.get("pack_prologue", []) + out.get("serve", []))
         if not rows:
             print("--fail-on-mismatch: no gated rows were produced "
-                  "(include 'equiv', 'shard' and/or 'pack' in --only)",
-                  file=sys.stderr)
+                  "(include 'equiv', 'shard', 'pack' and/or 'serve' in "
+                  "--only)", file=sys.stderr)
             raise SystemExit(1)
         bad = [r for r in rows if not r.get("exact_match", True)]
         if bad:

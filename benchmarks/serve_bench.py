@@ -1,0 +1,218 @@
+"""Continuous-batching serving benchmark: the scheduler vs the fixed-batch
+decode loop over the same jitted prefill/decode steps.
+
+Scenario (the daBNN-style serving-framework argument): a queue of
+mixed-prompt-length requests where HALF finish early — eos at 25% of
+``max_new_tokens`` (per-request ``eos_id`` + ``min_tokens`` pins the stop
+deterministically).  Two execution modes:
+
+* **fixed-batch** — the legacy engine semantics: rectangular batches only,
+  so requests group by prompt length (batch width = group size), and every
+  batch decodes the full ``max_new_tokens`` horizon regardless of eos.
+  Useful tokens are truncated at eos after the fact.
+* **continuous** — ``Scheduler.run``: one shape-static decode batch, slots
+  recycle the step a request hits eos/budget, queued requests admit into
+  freed slots, and the loop exits when queue+batch drain.
+
+Rows:
+
+* ``equivalence`` — continuous greedy tokens are IDENTICAL per request to
+  the per-request fixed-batch engine (batch=1 ``Engine.generate``,
+  truncated by the same eos/min_tokens rule).  Carries ``exact_match`` —
+  the CI bench-smoke job gates on it (--fail-on-mismatch).  One row runs
+  float, one runs a BMXNet-converted packed checkpoint (xla backend:
+  packed weights, in-graph dequant — CPU-fast) so the gate covers the
+  packed serving path end-to-end.
+* ``throughput`` — useful tokens/sec both modes, speedup, decode-step
+  counts, and mean time-to-first-token.  Fixed-batch TTFT is measured at
+  group START (a lower bound, i.e. favouring the baseline).  The ISSUE
+  acceptance bar: speedup >= 1.5x with half the requests stopping at 25%.
+
+Timing notes: both modes are warmed (jit) before the timed pass; the fp
+smoke model is tiny so CPU numbers are call-count dominated — which is
+exactly what the scheduler improves (fewer, fuller decode steps).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import converter
+from repro.core.policy import QuantPolicy
+from repro.kernels.dispatch import GemmConfig
+from repro.models import lm, registry
+from repro.nn.common import QCtx
+from repro.serve.engine import Engine, EngineConfig, Request, Scheduler
+
+
+def _expected_stream(full: np.ndarray, eos_id: int | None,
+                     min_tokens: int) -> np.ndarray:
+    """Apply the scheduler's retirement rule to a full-horizon stream."""
+    if eos_id is None:
+        return full
+    for idx, t in enumerate(full):
+        if idx + 1 >= min_tokens and int(t) == int(eos_id):
+            return full[:idx + 1]
+    return full
+
+
+def _build(arch: str, policy, batch: int, cache_len: int, max_new: int,
+           backend: str | None = None, packed: bool = False):
+    spec = registry.get(arch)
+    cfg = spec.smoke
+    gc = GemmConfig(backend=backend) if backend else GemmConfig()
+    ctx = QCtx(policy=policy, compute_dtype=jnp.float32, gemm_config=gc)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    if packed:
+        host = jax.tree.map(np.asarray, params)
+        params, rep = converter.convert(host, policy)
+        assert rep.n_packed > 0
+        params = jax.tree.map(jnp.asarray, params)
+    ecfg = EngineConfig(batch=batch, cache_len=cache_len,
+                        max_new_tokens=max_new)
+    return spec, cfg, ctx, params, Engine(spec, cfg, ctx, params, ecfg)
+
+
+def _requests(cfg, lens, max_new, ref_engine, rng):
+    """One (early, late) request pair per prompt length.  Early requests
+    stop via eos at 25% of max_new (eos_id = the reference stream's token
+    there, min_tokens pins the trigger position); late requests run the
+    full budget.  Returns (requests in interleaved submission order,
+    {rid: expected tokens})."""
+    k = max(1, max_new // 4)
+    reqs, expected = [], {}
+    rid = 0
+    for length in lens:
+        for early in (False, True):
+            prompt = rng.integers(0, cfg.vocab_size, (length,)).astype(
+                np.int32)
+            full = ref_engine.generate(prompt[None])[0]
+            eos = int(full[k - 1]) if early else None
+            min_tok = k if early else 0
+            reqs.append(Request(prompt=prompt, rid=rid, eos_id=eos,
+                                min_tokens=min_tok))
+            expected[rid] = _expected_stream(full, eos, min_tok)
+            rid += 1
+    return reqs, expected
+
+
+def _run_continuous(engine, reqs):
+    sched = Scheduler(engine)
+    for r in reqs:
+        sched.submit(Request(prompt=r.prompt, rid=r.rid, eos_id=r.eos_id,
+                             min_tokens=r.min_tokens,
+                             max_new_tokens=r.max_new_tokens))
+    t0 = time.perf_counter()
+    results = sched.run()
+    dt = time.perf_counter() - t0
+    return results, dt, sched.stats
+
+
+def _run_fixed(fixed_engine, reqs, expected):
+    """Legacy semantics: group by prompt length (rectangular batches of
+    the fixed engine's width), full horizon each, truncate at eos after.
+    Returns (wall seconds, useful tokens, per-request ttft lower bounds,
+    decode steps)."""
+    width = fixed_engine.ecfg.batch
+    by_len: dict[int, list[Request]] = {}
+    for r in reqs:
+        by_len.setdefault(len(r.prompt), []).append(r)
+    groups = []
+    for _, rs in sorted(by_len.items()):
+        for i in range(0, len(rs), width):
+            groups.append(rs[i:i + width])
+    t0 = time.perf_counter()
+    useful, ttfts, steps = 0, [], 0
+    for g in groups:
+        t_start = time.perf_counter() - t0
+        out = fixed_engine.generate(np.stack([r.prompt for r in g]))
+        steps += fixed_engine.ecfg.max_new_tokens - 1
+        for row, r in zip(out, g):
+            np.testing.assert_array_equal(
+                row[:len(expected[r.rid])], expected[r.rid])
+            useful += len(expected[r.rid])
+            ttfts.append(t_start)
+    return time.perf_counter() - t0, useful, ttfts, steps
+
+
+def rows(small: bool = False):
+    rng = np.random.default_rng(0)
+    max_new = 16 if small else 32
+    lens = (4, 6, 8, 10) if small else (4, 6, 8, 10, 12, 14, 16, 18)
+    cache_len = 32 if small else 64
+    batch = 4
+
+    # float engines: continuous (4 slots), fixed baseline (width 2 = the
+    # per-length group size), per-request reference (batch=1)
+    _, cfg, _, _, eng_cont = _build("granite-3-2b",
+                                    QuantPolicy.full_precision(),
+                                    batch, cache_len, max_new)
+    eng_ref = Engine(eng_cont.spec, eng_cont.cfg, eng_cont.ctx,
+                     eng_cont.params,
+                     EngineConfig(batch=1, cache_len=cache_len,
+                                  max_new_tokens=max_new))
+    eng_fixed = Engine(eng_cont.spec, eng_cont.cfg, eng_cont.ctx,
+                       eng_cont.params,
+                       EngineConfig(batch=2, cache_len=cache_len,
+                                    max_new_tokens=max_new))
+
+    reqs, expected = _requests(cfg, lens, max_new, eng_ref, rng)
+
+    # -- equivalence (float): continuous == per-request fixed, exactly --
+    results, _, _ = _run_continuous(eng_cont, reqs)
+    mismatch = [r.rid for r in reqs
+                if not np.array_equal(results[r.rid], expected[r.rid])]
+    yield {
+        "mode": "equivalence", "engine": "float", "requests": len(reqs),
+        "batch": batch, "max_new": max_new,
+        "mismatches": len(mismatch),
+        "exact_match": not mismatch,
+    }
+
+    # -- equivalence (packed, xla backend): the deployment-mode engine --
+    pk_max_new = 6
+    _, pcfg, _, _, pk_cont = _build(
+        "granite-3-2b", QuantPolicy.binary(), 2, 24, pk_max_new,
+        backend="xla", packed=True)
+    pk_ref = Engine(pk_cont.spec, pk_cont.cfg, pk_cont.ctx, pk_cont.params,
+                    EngineConfig(batch=1, cache_len=24,
+                                 max_new_tokens=pk_max_new))
+    pk_reqs, pk_expected = _requests(pcfg, (4, 5), pk_max_new, pk_ref, rng)
+    pk_results, _, _ = _run_continuous(pk_cont, pk_reqs)
+    pk_mismatch = [r.rid for r in pk_reqs
+                   if not np.array_equal(pk_results[r.rid],
+                                         pk_expected[r.rid])]
+    yield {
+        "mode": "equivalence", "engine": "packed-xla",
+        "requests": len(pk_reqs), "batch": 2, "max_new": pk_max_new,
+        "mismatches": len(pk_mismatch),
+        "exact_match": not pk_mismatch,
+    }
+
+    # -- throughput: fixed-batch vs continuous, half stopping at 25% --
+    _run_fixed(eng_fixed, reqs, expected)  # warm the fixed engine's jits
+    fx_dt, fx_useful, fx_ttfts, fx_steps = _run_fixed(
+        eng_fixed, reqs, expected)
+    # the equivalence pass above warmed the continuous engine's jits
+    results, ct_dt, stats = _run_continuous(eng_cont, reqs)
+    ct_useful = sum(len(v) for v in results.values())
+    assert ct_useful == fx_useful, (ct_useful, fx_useful)
+    fx_tps = fx_useful / fx_dt
+    ct_tps = ct_useful / ct_dt
+    yield {
+        "mode": "throughput", "requests": len(reqs), "batch": batch,
+        "max_new": max_new, "early_finish_frac": 0.5, "eos_at_frac": 0.25,
+        "useful_tokens": ct_useful,
+        "fixed_decode_steps": fx_steps,
+        "cont_decode_steps": stats.steps,
+        "fixed_tok_s": round(fx_tps, 1),
+        "cont_tok_s": round(ct_tps, 1),
+        "speedup": round(ct_tps / fx_tps, 2),
+        "fixed_ttft_ms_mean": round(float(np.mean(fx_ttfts)) * 1e3, 1),
+        "cont_ttft_ms_mean": round(
+            float(np.mean(list(stats.t_first.values()))) * 1e3, 1),
+    }

@@ -1,10 +1,13 @@
 """Beyond-paper example: the BMXNet deployment story at LLM scale.
 
 Binarize an assigned-pool LM (reduced config), convert, and serve with the
-packed xnor path — then print what the same conversion does to the FULL
-config's weight traffic (the decode-roofline argument from EXPERIMENTS.md:
-decode is weight-streaming-bound; 1-bit weights cut that stream ~10-12x
-end-to-end including the fp embedding/head).
+packed xnor path — first the legacy rectangular batch, then the
+continuous-batching scheduler (mixed prompt lengths, per-request budgets,
+slot recycling off the per-slot positions) — then print what the same
+conversion does to the FULL config's weight traffic (the decode-roofline
+argument from EXPERIMENTS.md: decode is weight-streaming-bound; 1-bit
+weights cut that stream ~10-12x end-to-end including the fp
+embedding/head).
 
 Run:  PYTHONPATH=src python examples/packed_llm_serving.py [--arch ID]
 """
@@ -21,7 +24,7 @@ from repro.kernels.dispatch import GemmConfig
 from repro.launch import specs as specs_lib
 from repro.models import lm, registry
 from repro.nn.common import QCtx
-from repro.serve.engine import Engine, EngineConfig
+from repro.serve.engine import Engine, EngineConfig, Request, Scheduler
 
 
 def main():
@@ -54,6 +57,23 @@ def main():
                 (2, cfg.vision_prefix, cfg.d_vision)), jnp.float32)
     out = eng.generate(prompts, **kwargs)
     print(f"  generated: {out[0]}")
+
+    print("== continuous batching (packed engine, 2 slots, 4 requests) ==")
+    rng = np.random.default_rng(2)
+    sched = Scheduler(eng)
+    for i, (length, budget) in enumerate(
+            zip((6, 9, 7, 6), (10, 4, 6, 8))):
+        prompt = rng.integers(0, cfg.vocab_size, (length,)).astype(np.int32)
+        kw = {k: np.asarray(v)[0] for k, v in kwargs.items()}
+        sched.submit(Request(prompt=prompt, max_new_tokens=budget,
+                             prefill_kwargs=kw))
+    results = sched.run()
+    stats = sched.stats
+    print(f"  {len(results)} requests, {stats.steps} decode steps, "
+          f"{stats.prefills} prefills; admissions (rid, slot): "
+          f"{stats.admissions}")
+    for rid in sorted(results):
+        print(f"  rid={rid}: {results[rid]}")
 
     print(f"== full-config weight traffic ({args.arch}) ==")
     full = spec.config

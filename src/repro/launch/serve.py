@@ -1,11 +1,20 @@
 """Serving launcher: load a (float or packed) checkpoint and run batched
 generation — the paper's deployment mode when ``--packed``.
 
+Generation runs on the continuous-batching scheduler (serve/engine.py):
+the default mode feeds one rectangular batch through ``Engine.generate``
+(legacy fixed-batch semantics), while ``--request-stream`` submits a
+queue of mixed-prompt-length requests — twice as many as there are slots
+— straight to ``Scheduler.run`` to exercise slot recycling, per-request
+eos (``--eos-id``) and the drained-loop early exit, and prints per-step /
+TTFT stats.
+
 Example:
   PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b --smoke \
       --steps 50 --quant binary --export-packed /tmp/g.packed.npz
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
-      --quant binary --packed /tmp/g.packed.npz --prompts 4 --new-tokens 16
+      --quant binary --packed /tmp/g.packed.npz --prompts 4 --new-tokens 16 \
+      --request-stream
 
 k-bit (DoReFa) packed serving uses the same flow with ``--quant w4a4`` /
 ``--quant w8a8``: the converter emits bit-plane stacks and the dispatch
@@ -33,7 +42,7 @@ from repro.models import lm as lm_model
 from repro.models import registry
 from repro.models import whisper as whisper_model
 from repro.nn.common import QCtx
-from repro.serve.engine import Engine, EngineConfig
+from repro.serve.engine import Engine, EngineConfig, Request, Scheduler
 
 
 def load_packed(path: str, template):
@@ -78,11 +87,24 @@ def main() -> None:
                     help="MoE expert-capacity factor over the balanced "
                          "share for the EP path (default 2.0); overflow "
                          "rows drop and are never quantized or packed")
-    ap.add_argument("--prompts", type=int, default=4)
+    ap.add_argument("--prompts", type=int, default=4,
+                    help="batch width == scheduler KV-cache slots")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=128)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds params/prompts AND EngineConfig.seed (the "
+                         "sampling key stream when --temperature > 0)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop token: the scheduler retires (and recycles)"
+                         " a slot the step it emits this id")
+    ap.add_argument("--request-stream", action="store_true",
+                    help="continuous-batching demo mode: submit 2x "
+                         "--prompts requests with mixed prompt lengths to "
+                         "the Scheduler queue (slots recycle as requests "
+                         "finish) instead of one rectangular batch")
     args = ap.parse_args()
 
     spec = registry.get(args.arch)
@@ -113,21 +135,53 @@ def main() -> None:
         print(f"loaded packed checkpoint: {args.packed}")
 
     ecfg = EngineConfig(batch=args.prompts, cache_len=args.cache_len,
-                        max_new_tokens=args.new_tokens)
+                        max_new_tokens=args.new_tokens,
+                        temperature=args.temperature, eos_id=args.eos_id,
+                        seed=args.seed)
     eng = Engine(spec, cfg, ctx, params, ecfg)
 
     rng = np.random.default_rng(args.seed)
+
+    def req_kwargs(n):
+        kw = {}
+        if spec.family == "whisper":
+            kw["frames"] = rng.standard_normal(
+                (n, cfg.t_enc, cfg.d_model)).astype(np.float32)
+        elif getattr(cfg, "vision_prefix", 0):
+            kw["vision_embeds"] = rng.standard_normal(
+                (n, cfg.vision_prefix, cfg.d_vision)).astype(np.float32)
+        return kw
+
+    if args.request_stream:
+        n = 2 * args.prompts  # queue depth > slots -> recycling
+        lens = [max(2, args.prompt_len - 2 * (i % 4)) for i in range(n)]
+        kw = req_kwargs(n)
+        sched = Scheduler(eng)
+        for i, length in enumerate(lens):
+            prompt = rng.integers(0, cfg.vocab_size, (length,)).astype(
+                np.int32)
+            sched.submit(Request(
+                prompt=prompt,
+                prefill_kwargs={k: v[i] for k, v in kw.items()}))
+        t0 = time.time()
+        results = sched.run()
+        dt = time.time() - t0
+        stats = sched.stats
+        n_tok = sum(len(v) for v in results.values())
+        ttft = np.mean(list(stats.t_first.values())) * 1e3
+        print(f"served {len(results)} requests (prompt lens {min(lens)}-"
+              f"{max(lens)}) on {args.prompts} slots in {dt:.2f}s: "
+              f"{n_tok} tokens ({n_tok / dt:.1f} tok/s), "
+              f"{stats.steps} decode steps, {stats.prefills} prefills, "
+              f"mean TTFT {ttft:.1f}ms")
+        for rid in sorted(results)[:4]:
+            print(f"  rid={rid} ({len(results[rid])} tok): "
+                  f"{results[rid][:10]}")
+        return
+
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.prompts, args.prompt_len)).astype(np.int32)
-    kwargs = {}
-    if spec.family == "whisper":
-        kwargs["frames"] = jnp.asarray(
-            rng.standard_normal((args.prompts, cfg.t_enc, cfg.d_model)),
-            jnp.float32)
-    elif getattr(cfg, "vision_prefix", 0):
-        kwargs["vision_embeds"] = jnp.asarray(
-            rng.standard_normal((args.prompts, cfg.vision_prefix,
-                                 cfg.d_vision)), jnp.float32)
+    kwargs = {k: jnp.asarray(v) for k, v in req_kwargs(args.prompts).items()}
 
     t0 = time.time()
     out = eng.generate(prompts, **kwargs)

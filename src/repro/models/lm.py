@@ -347,6 +347,51 @@ def init_cache(
     return {"layers": layers}
 
 
+def cache_insert(cache: Params, sub: Params, slots: jax.Array) -> Params:
+    """Slot-targeted cache insertion for the continuous-batching scheduler:
+    write a (G,)-batch prefill cache into G slots of the serving batch
+    cache.  ``slots``: (G,) int32 slot indices (traced-safe).
+
+    Every cache leaf is batch-leading (attention k/v/slot_pos, rglru
+    h/conv, rwkv S/shift, cm_shift), so one row insertion per leaf covers
+    them all.  The inserted ``slot_pos`` rows carry -1 beyond the prompt
+    (init_cache default), which is what retires the previous occupant's
+    stale rows — ``nn/attention._mask`` masks ``pos < 0``."""
+    return jax.tree.map(
+        lambda big, small: attn_lib.insert_rows(big, small, slots),
+        cache, sub,
+    )
+
+
+def cache_reset(cfg: LMConfig, cache: Params, slot: jax.Array) -> Params:
+    """Retire one serving slot: attention rows become invisible
+    (``slot_pos = -1`` via ``attn_lib.cache_reset``) and recurrent state
+    rows are zeroed.
+
+    NOTE this is hygiene, not the safety mechanism: the shape-static
+    decode step keeps writing the retired slot's junk k/v each step, and
+    ``cache_fill`` stores those with VISIBLE positions (>= 0).  What
+    actually protects the next occupant is :func:`cache_insert`
+    overwriting the ENTIRE slot (all rows, recurrent state included) at
+    admission — do not weaken that to a partial insert."""
+    layers = []
+    for i, lc in enumerate(cache["layers"]):
+        lc = dict(lc)
+        kind = cfg.mixer_kind(i)
+        if kind in ("attn", "local_attn"):
+            lc.update(attn_lib.cache_reset(lc, slot))
+        elif kind == "rglru":
+            lc["h"] = attn_lib.zero_rows(lc["h"], slot)
+            lc["conv"] = attn_lib.zero_rows(lc["conv"], slot)
+        elif kind == "rwkv6":
+            lc["S"] = attn_lib.zero_rows(lc["S"], slot)
+            lc["shift"] = attn_lib.zero_rows(lc["shift"], slot)
+        if "cm_shift" in lc:
+            lc["cm_shift"] = attn_lib.zero_rows(lc["cm_shift"], slot)
+        layers.append(lc)
+    return {"layers": layers}
+
+
 def decode_step(
     params: Params,
     cfg: LMConfig,

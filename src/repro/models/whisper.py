@@ -151,6 +151,28 @@ def init_cache(cfg: WhisperConfig, b: int, cache_len: int, dtype=jnp.bfloat16):
     return {"layers": layers}
 
 
+def cache_insert(cache, sub, slots: jax.Array):
+    """Slot-targeted cache insertion (see models/lm.cache_insert): write a
+    (G,)-batch prefill cache — decoder self-cache AND the static
+    cross-attention cache — into G slots of the serving batch cache."""
+    return jax.tree.map(
+        lambda big, small: attn_lib.insert_rows(big, small, slots),
+        cache, sub,
+    )
+
+
+def cache_reset(cfg: WhisperConfig, cache, slot: jax.Array):
+    """Retire one serving slot: mark the slot's self- and cross-cache rows
+    empty (slot_pos = -1) so attention masks them until readmission."""
+    layers = []
+    for lc in cache["layers"]:
+        layers.append({
+            "self": attn_lib.cache_reset(lc["self"], slot),
+            "cross": attn_lib.cache_reset(lc["cross"], slot),
+        })
+    return {"layers": layers}
+
+
 def prefill(params, cfg: WhisperConfig, ctx: QCtx, frames, tokens, cache_len):
     """Encode audio, prefill decoder self-cache + static cross-cache."""
     enc = encode(params, cfg, ctx, frames)

@@ -224,6 +224,39 @@ def cache_init(
     }
 
 
+def insert_rows(big: jax.Array, small: jax.Array, slots: jax.Array) -> jax.Array:
+    """Write the G leading rows of ``small`` into batch rows ``slots`` of
+    ``big`` (both batch-leading; ``slots``: (G,) int32, traced-safe).  The
+    per-slot building block of the continuous-batching scheduler's cache
+    insertion (models/{lm,whisper}.cache_insert tree-map this over every
+    cache leaf)."""
+    for g in range(small.shape[0]):
+        big = jax.lax.dynamic_update_slice_in_dim(
+            big, small[g:g + 1].astype(big.dtype), slots[g], axis=0
+        )
+    return big
+
+
+def zero_rows(x: jax.Array, slot: jax.Array) -> jax.Array:
+    """Zero batch row ``slot`` (recurrent-state reset on slot retirement)."""
+    return jax.lax.dynamic_update_slice_in_dim(
+        x, jnp.zeros((1,) + x.shape[1:], x.dtype), slot, axis=0
+    )
+
+
+def cache_reset(cache: Params, slot: jax.Array) -> Params:
+    """Retire one batch slot of an attention cache: mark every row of that
+    slot empty (``slot_pos = -1``) so :func:`_mask` hides it from future
+    queries.  K/V bytes are left in place — the next occupant's prefill
+    insertion overwrites the whole slot (and carries its own -1 rows past
+    the prompt), so stale keys can never become visible again."""
+    cache_len = cache["slot_pos"].shape[1]
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], jnp.full((1, cache_len), -1, jnp.int32), (slot, 0)
+    )
+    return {**cache, "slot_pos": slot_pos}
+
+
 def cache_fill(cache: Params, k, v, positions) -> Params:
     """Write to the cache.  k/v: (B, S, KVH, Dh), positions: (B, S).
     Slots are ``pos % cache_len`` (ring for local layers; identity when

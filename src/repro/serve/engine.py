@@ -1,12 +1,44 @@
-"""Serving engine: batched prefill + fixed-batch greedy/sampled decode.
+"""Serving engine: continuous-batching scheduler over the packed-GEMM
+decode step.
 
-The engine keeps one fixed-capacity KV cache; per-slot positions allow
-sequences of different lengths in the same batch (``pos`` is per-batch in
-attn_decode).  ``Engine.generate`` is a fixed-batch loop: every sequence
-decodes for ``max_new_tokens`` steps and slots are NOT recycled when a
-sequence finishes early — true continuous batching (slot recycling off the
-per-slot positions) is future work; the per-batch ``pos`` plumbing it
-needs is already in place.
+``Scheduler`` owns a FIFO request queue and ``EngineConfig.batch`` KV-cache
+slots.  Its loop:
+
+* **admission** — free slots are filled from the queue head: the maximal
+  run of queued requests with the same prompt length prefills together
+  (one jitted call), the per-request caches are written into their slots
+  with ``models/{lm,whisper}.cache_insert`` (a batch-row insertion per
+  cache leaf), and the first token is sampled from the prefill logits.
+  Each slot runs its own position stream starting at 0 — the per-batch
+  ``pos`` plumbing in ``nn/attention`` — and the inserted cache carries
+  ``slot_pos = -1`` beyond the prompt, which is what makes the previous
+  occupant's stale rows invisible (``_mask`` hides ``pos < 0``).
+* **decode** — ONE shape-static jitted step for the whole batch (fixed
+  ``batch`` x ``cache_len``; retired slots decode junk that the active
+  mask zeroes out of sampling, so recycling never recompiles and costs no
+  extra host round-trips beyond the one per-step token sync).
+* **retirement** — the step a sequence emits its ``eos_id`` or exhausts
+  its per-request ``max_new_tokens``, its slot is reset
+  (``cache_reset``: slot rows invisible, recurrent state zeroed) and
+  immediately eligible for the next queued request.  The reset is
+  hygiene only — later decode steps still write the retired slot's junk
+  k/v at visible positions; correctness rests on admission's FULL-slot
+  ``cache_insert`` overwrite.
+* **early exit** — the loop ends the step the queue and the batch are
+  both drained; nobody pays for a fixed-horizon drain.
+
+Shape-static jit invariants: one prefill compile per distinct
+(group, prompt_len) admission shape, one decode compile total, one cache
+insert compile per group size.  Greedy outputs are bit-identical to
+per-request fixed-batch generation because every per-token op is
+batch-row-independent — the one exception is capacity-bounded MoE
+routing (`GemmConfig.capacity_factor`), where drops depend on batchmates.
+
+``Engine.generate`` is a thin compatibility wrapper over
+``Scheduler.run``: rectangular prompts admit as one full-width group and
+decode exactly as the old fixed-batch loop did (same tokens), while
+``EngineConfig.eos_id`` now stops rows early (rows pad with the stop
+token).
 
 Serving a BMXNet-converted checkpoint (packed params) is the paper's
 deployment mode: quantized weights stay bit-packed in HBM — 32x smaller at
@@ -25,13 +57,14 @@ psums exactly; see kernels/dispatch.py).  The activation prologue
 (quantize+pack, Fig. 1's "binarize input") is dispatch-owned too: one
 fused Pallas pass per GEMM, running INSIDE the shard_map body on the
 ``"k"`` layout — ``GemmConfig.fused_prologue=False`` swaps in the jnp
-reference path for A/B checks, and ``GemmConfig.capacity_factor`` bounds
-MoE expert buckets (dropped rows are never quantized or packed).
+reference path for A/B checks.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -49,10 +82,17 @@ Params = dict[str, Any]
 
 @dataclasses.dataclass
 class EngineConfig:
-    batch: int
+    batch: int  # KV-cache slots == the shape-static decode width
     cache_len: int
-    max_new_tokens: int = 32
+    max_new_tokens: int = 32  # per-request default budget
     temperature: float = 0.0  # 0 = greedy
+    # sequence stop token: a slot retires (and recycles) the step it emits
+    # this id.  None = budget-only retirement (the legacy fixed-horizon
+    # behaviour for Engine.generate).
+    eos_id: int | None = None
+    # PRNG seed for sampled decoding (temperature > 0); the key stream
+    # splits before EVERY sample, so no key is ever reused.
+    seed: int = 0
     # per-engine override of how quantized GEMMs execute (backend + tiles
     # + fused_prologue + capacity_factor); None inherits the QCtx's
     # gemm_config.  Tensor-parallel serving picks a `shard-*` backend here
@@ -64,7 +104,52 @@ class EngineConfig:
     mesh: Any = None
 
 
+@dataclasses.dataclass
+class Request:
+    """One generation request for the scheduler queue.
+
+    ``prefill_kwargs`` holds per-request prefill operands WITHOUT the batch
+    dim (lm VLM: ``vision_embeds`` (P, d_vision); whisper: ``frames``
+    (T_enc, d_model)); admission stacks them per group.  ``max_new_tokens``
+    and ``eos_id`` fall back to the EngineConfig values when None."""
+
+    prompt: np.ndarray  # (S,) int32
+    rid: int | None = None  # assigned by Scheduler.submit when None
+    max_new_tokens: int | None = None
+    eos_id: int | None = None
+    # suppress eos-retirement until this many tokens have been emitted
+    # (the standard `min_tokens` sampling knob)
+    min_tokens: int = 0
+    prefill_kwargs: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Host-side mirror of one occupied KV-cache slot."""
+
+    rid: int
+    prompt_len: int
+    budget: int  # tokens still allowed (including not-yet-emitted)
+    eos_id: int | None
+    min_tokens: int = 0
+    tokens: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    steps: int = 0  # jitted decode steps executed
+    prefills: int = 0  # jitted prefill (admission) calls
+    admissions: list = dataclasses.field(default_factory=list)  # (rid, slot)
+    t_first: dict = dataclasses.field(default_factory=dict)  # rid -> s
+    t_done: dict = dataclasses.field(default_factory=dict)  # rid -> s
+
+
 class Engine:
+    """Owns the jitted model entry points + the QCtx/GemmConfig wiring.
+
+    ``generate`` keeps the legacy fixed-batch surface; request-level
+    serving goes through :class:`Scheduler` directly."""
+
     def __init__(self, spec: ArchSpec, cfg, ctx: QCtx, params: Params,
                  ecfg: EngineConfig):
         gc = ecfg.gemm_config if ecfg.gemm_config is not None \
@@ -83,41 +168,217 @@ class Engine:
         self.params = params
         fam = spec.family
         mod = lm_model if fam == "lm" else whisper_model
+        self._mod = mod
 
-        def _prefill(params, tokens, **kw):
-            return mod.prefill(params, cfg, ctx, tokens,
-                               cache_len=ecfg.cache_len, **kw)
+        if fam == "whisper":
+            def _prefill(params, tokens, frames):
+                return mod.prefill(params, cfg, ctx, frames, tokens,
+                                   cache_len=ecfg.cache_len)
+        else:
+            def _prefill(params, tokens, **kw):
+                return mod.prefill(params, cfg, ctx, tokens,
+                                   cache_len=ecfg.cache_len, **kw)
 
         def _decode(params, cache, tokens, pos):
             return mod.decode_step(params, cfg, ctx, cache, tokens, pos)
 
+        def _reset(cache, slot):
+            return mod.cache_reset(cfg, cache, slot)
+
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
+        self._insert = jax.jit(mod.cache_insert)
+        self._reset = jax.jit(_reset)
 
-    def _sample(self, logits: jax.Array, key) -> jax.Array:
+    def init_cache(self) -> Params:
+        """A fresh all-slots-empty serving cache (batch x cache_len)."""
+        return self._mod.init_cache(self.cfg, self.ecfg.batch,
+                                    self.ecfg.cache_len,
+                                    self.ctx.compute_dtype)
+
+    @property
+    def pos_offset(self) -> int:
+        """Decode positions start at prompt_len + this (VLM vision prefix
+        rows sit before the text prompt in the cache)."""
+        if self.spec.family == "whisper":
+            return 0
+        return getattr(self.cfg, "vision_prefix", 0)
+
+    def _sample(self, logits: jax.Array, key,
+                active: jax.Array | None = None) -> jax.Array:
+        last = logits[:, -1, :]
         if self.ecfg.temperature <= 0:
-            return jnp.argmax(logits[:, -1, :], axis=-1)
-        return jax.random.categorical(
-            key, logits[:, -1, :] / self.ecfg.temperature
-        )
+            tok = jnp.argmax(last, axis=-1)
+        else:
+            tok = jax.random.categorical(key, last / self.ecfg.temperature)
+        if active is not None:
+            # retired slots decode junk; pin them to 0 so nothing
+            # downstream has to special-case per-slot on the host
+            tok = jnp.where(active, tok, 0)
+        return tok.astype(jnp.int32)
 
     def generate(self, prompts: np.ndarray, **prefill_kwargs) -> np.ndarray:
-        """prompts: (B, S_prompt) int32 -> (B, max_new_tokens) int32."""
-        b, s = prompts.shape
-        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
-                                      **prefill_kwargs)
-        key = jax.random.PRNGKey(0)
-        offset = getattr(self.cfg, "vision_prefix", 0)
-        pos = jnp.full((b,), s + offset, jnp.int32)
-        out = []
-        tok = self._sample(logits, key)
-        for i in range(self.ecfg.max_new_tokens):
-            out.append(np.asarray(tok))
-            logits, cache = self._decode(self.params, cache, tok[:, None], pos)
+        """prompts: (B, S_prompt) int32 -> (B, max_new_tokens) int32.
+
+        Compatibility wrapper over :class:`Scheduler`: the rectangular
+        batch admits as one group (a single batched prefill, exactly the
+        old fixed-batch path) and greedy outputs are unchanged.  With
+        ``EngineConfig.eos_id`` set, rows that stop early are padded with
+        the stop token out to ``max_new_tokens``."""
+        prompts = np.asarray(prompts)
+        b, _ = prompts.shape
+        sched = Scheduler(self)
+        for i in range(b):
+            kw = {k: np.asarray(v)[i] for k, v in prefill_kwargs.items()}
+            sched.submit(Request(prompt=prompts[i], rid=i,
+                                 prefill_kwargs=kw))
+        results = sched.run()
+        self.last_stats = sched.stats  # step/admission accounting
+        n = self.ecfg.max_new_tokens
+        out = np.zeros((b, n), np.int32)
+        for i in range(b):
+            toks = results[i]
+            out[i, :len(toks)] = toks
+            if 0 < len(toks) < n:  # early EOS: pad with the stop token
+                out[i, len(toks):] = toks[-1]
+        return out
+
+
+class Scheduler:
+    """Continuous-batching scheduler over an :class:`Engine`.
+
+    ``submit`` queues requests; ``run`` drives admission / decode /
+    retirement until queue and batch drain, returning
+    ``{rid: (n_tokens,) int32}`` (the emitted stream, ending with the eos
+    token when one triggered retirement).  ``stats`` records decode-step
+    and admission counts plus per-request first-token / completion times
+    (relative to the ``run`` start) for throughput accounting."""
+
+    def __init__(self, engine: Engine):
+        self.eng = engine
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: list[SlotState | None] = [None] * engine.ecfg.batch
+        self.stats = SchedulerStats()
+        self._results: dict[int, np.ndarray] = {}
+        self._next_rid = 0
+
+    def submit(self, request: Request) -> int:
+        if request.rid is None:
+            request.rid = self._next_rid
+        taken = ({r.rid for r in self.queue} | set(self._results)
+                 | {s.rid for s in self.slots if s is not None})
+        if request.rid in taken:
+            raise ValueError(f"duplicate rid {request.rid}: results are "
+                             "keyed by rid, a collision would drop one "
+                             "request's stream")
+        self._next_rid = max(self._next_rid, request.rid) + 1
+        self.queue.append(request)
+        return request.rid
+
+    # -- internals ---------------------------------------------------------
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def _retire(self, i: int, st: SlotState) -> None:
+        self._results[st.rid] = np.asarray(st.tokens, np.int32)
+        self.stats.t_done[st.rid] = self._now()
+        self.slots[i] = None
+
+    def _emit(self, i: int, st: SlotState, token: int) -> bool:
+        """Record one emitted token; retire the slot on eos / budget
+        exhaustion.  Returns True when the slot retired."""
+        if not st.tokens:
+            self.stats.t_first[st.rid] = self._now()
+        st.tokens.append(token)
+        st.budget -= 1
+        if st.budget <= 0 or (st.eos_id is not None and token == st.eos_id
+                              and len(st.tokens) >= st.min_tokens):
+            self._retire(i, st)
+            return True
+        return False
+
+    def _admit(self, cache, tok, pos, key):
+        """Fill free slots from the queue head.  The maximal FIFO run of
+        same-prompt-length requests prefills as ONE jitted call (so the
+        rectangular ``generate`` batch keeps its single batched prefill);
+        each request's cache rows land in its slot via ``cache_insert``
+        and its first token comes from the prefill logits."""
+        eng, ecfg = self.eng, self.eng.ecfg
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        while free and self.queue:
+            head_len = len(self.queue[0].prompt)
+            group: list[Request] = [self.queue.popleft()]
+            while (self.queue and len(group) < len(free)
+                   and len(self.queue[0].prompt) == head_len):
+                group.append(self.queue.popleft())
+            taken, free = free[:len(group)], free[len(group):]
+
+            prompts = np.stack([np.asarray(r.prompt) for r in group])
+            kw = {
+                k: jnp.asarray(
+                    np.stack([np.asarray(r.prefill_kwargs[k]) for r in group])
+                )
+                for k in group[0].prefill_kwargs
+            }
+            logits, sub_cache = eng._prefill(
+                eng.params, jnp.asarray(prompts, jnp.int32), **kw)
+            self.stats.prefills += 1
             key, sub = jax.random.split(key)
-            tok = self._sample(logits, sub)
-            pos = pos + 1
-        return np.stack(out, axis=1)
+            first = np.asarray(eng._sample(logits, sub))
+            cache = eng._insert(cache, sub_cache,
+                                jnp.asarray(taken, jnp.int32))
+            start_pos = prompts.shape[1] + eng.pos_offset
+            for g, i in enumerate(taken):
+                r = group[g]
+                st = SlotState(
+                    rid=r.rid, prompt_len=len(r.prompt),
+                    budget=(r.max_new_tokens if r.max_new_tokens is not None
+                            else ecfg.max_new_tokens),
+                    eos_id=(r.eos_id if r.eos_id is not None
+                            else ecfg.eos_id),
+                    min_tokens=r.min_tokens,
+                )
+                self.slots[i] = st
+                self.stats.admissions.append((r.rid, i))
+                if st.budget <= 0:  # zero-token request: empty stream
+                    self._retire(i, st)
+                    free.append(i)
+                elif self._emit(i, st, int(first[g])):
+                    free.append(i)  # eos/budget hit on the first token
+                else:
+                    tok[i] = first[g]
+                    pos[i] = start_pos
+        return cache, tok, pos, key
+
+    def run(self) -> dict[int, np.ndarray]:
+        eng, ecfg = self.eng, self.eng.ecfg
+        self._t0 = time.perf_counter()
+        cache = eng.init_cache()
+        b = ecfg.batch
+        tok = np.zeros((b,), np.int32)
+        pos = np.zeros((b,), np.int32)
+        key = jax.random.PRNGKey(ecfg.seed)
+
+        while self.queue or any(s is not None for s in self.slots):
+            cache, tok, pos, key = self._admit(cache, tok, pos, key)
+            active = np.array([s is not None for s in self.slots])
+            if not active.any():
+                continue  # everything admitted retired on its first token
+            logits, cache = eng._decode(
+                eng.params, cache, jnp.asarray(tok)[:, None],
+                jnp.asarray(pos))
+            key, sub = jax.random.split(key)
+            sampled = np.asarray(
+                eng._sample(logits, sub, jnp.asarray(active)))
+            self.stats.steps += 1
+            pos = np.where(active, pos + 1, pos).astype(np.int32)
+            tok = np.where(active, sampled, tok).astype(np.int32)
+            for i in range(b):
+                st = self.slots[i]
+                if st is not None and self._emit(i, st, int(sampled[i])):
+                    cache = eng._reset(cache, jnp.int32(i))
+        return self._results
 
 
 def serve_step_fn(spec: ArchSpec, cfg, ctx: QCtx):

@@ -1,17 +1,22 @@
-"""Serving engine: generation works, and the packed (xnor) engine produces
+"""Serving engine: generation works, the packed (xnor) engine produces
 IDENTICAL greedy generations to the fake-quant engine on the same binary
-checkpoint — the end-to-end version of the paper's §2.2.2 invariant."""
+checkpoint — the end-to-end version of the paper's §2.2.2 invariant —
+and the continuous-batching scheduler (slot recycling, per-request eos,
+queue admission) emits exactly the tokens the per-request fixed-batch
+path would."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core import converter
 from repro.core.policy import QuantPolicy
 from repro.models import lm, registry
 from repro.nn.common import QCtx
-from repro.serve.engine import Engine, EngineConfig
+from repro.serve.engine import Engine, EngineConfig, Request, Scheduler
 
 
 def test_engine_generates():
@@ -130,6 +135,199 @@ def test_engine_mesh_threads_into_shard_config(mesh_factory):
                                mesh=mesh))
     assert eng2.ctx.gemm_config.mesh is mesh
     assert eng2.ctx.mesh is mesh
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching scheduler
+# ---------------------------------------------------------------------------
+
+_FP_STATE: dict = {}
+
+
+def _fp_engine(batch, max_new=6, cache_len=32, **ecfg_kw):
+    """Module-cached fp engines over shared granite-smoke params, so the
+    scheduler tests (and every hypothesis example) reuse jit compiles."""
+    key = (batch, max_new, cache_len, tuple(sorted(ecfg_kw.items())))
+    if key not in _FP_STATE:
+        if "params" not in _FP_STATE:
+            spec = registry.get("granite-3-2b")
+            _FP_STATE["spec"], _FP_STATE["cfg"] = spec, spec.smoke
+            _FP_STATE["ctx"] = QCtx(policy=QuantPolicy.full_precision(),
+                                    compute_dtype=jnp.float32)
+            _FP_STATE["params"] = lm.init(jax.random.PRNGKey(0),
+                                          spec.smoke)
+        _FP_STATE[key] = Engine(
+            _FP_STATE["spec"], _FP_STATE["cfg"], _FP_STATE["ctx"],
+            _FP_STATE["params"],
+            EngineConfig(batch=batch, cache_len=cache_len,
+                         max_new_tokens=max_new, **ecfg_kw))
+    return _FP_STATE[key]
+
+
+def _solo_stream(prompt, max_new=6):
+    """Per-request fixed-batch reference (batch=1 engine), cached."""
+    key = ("solo", prompt.tobytes(), max_new)
+    if key not in _FP_STATE:
+        _FP_STATE[key] = _fp_engine(1, max_new).generate(prompt[None])[0]
+    return _FP_STATE[key]
+
+
+def _expected(full, eos_id, min_tokens):
+    """The scheduler's retirement rule applied to a full-horizon stream."""
+    if eos_id is not None:
+        for idx, t in enumerate(full):
+            if idx + 1 >= min_tokens and int(t) == int(eos_id):
+                return full[:idx + 1]
+    return full
+
+
+def _prompt(rng, length):
+    vocab = _FP_STATE["cfg"].vocab_size
+    return rng.integers(0, vocab, (length,)).astype(np.int32)
+
+
+def test_scheduler_slot_recycling():
+    """Queue (4 requests) > slots (2): freed slots are reused by queued
+    requests, same-length neighbours prefill as one group, and every
+    recycled request's tokens equal its per-request fixed-batch run."""
+    eng = _fp_engine(2)
+    rng = np.random.default_rng(0)
+    prompts = [_prompt(rng, length) for length in (4, 4, 7, 7)]
+    sched = Scheduler(eng)
+    for p in prompts:
+        sched.submit(Request(prompt=p))
+    results = sched.run()
+    for rid, p in enumerate(prompts):
+        np.testing.assert_array_equal(results[rid], _solo_stream(p))
+    slots_used = [slot for _, slot in sched.stats.admissions]
+    assert sorted(sched.stats.admissions) == [(0, 0), (1, 1), (2, 0),
+                                              (3, 1)]
+    assert len(slots_used) == 4 and set(slots_used) == {0, 1}
+    assert sched.stats.prefills == 2  # (4,4) then (7,7) groups
+    # both generations ran concurrently: 2 waves of (max_new - 1) steps
+    assert sched.stats.steps == 2 * (6 - 1)
+
+
+def test_scheduler_eos_early_exit():
+    """A request retires the step it emits eos (budget untouched), the
+    drained loop exits immediately, and min_tokens suppresses an earlier
+    occurrence of the same token."""
+    eng = _fp_engine(2)
+    rng = np.random.default_rng(1)
+    p = _prompt(rng, 5)
+    full = _solo_stream(p)
+    eos = int(full[2])
+
+    sched = Scheduler(eng)
+    rid = sched.submit(Request(prompt=p, eos_id=eos, min_tokens=3))
+    res = sched.run()
+    np.testing.assert_array_equal(res[rid], _expected(full, eos, 3))
+    # early exit: only as many decode steps as emitted tokens need
+    assert sched.stats.steps == len(res[rid]) - 1 < 5
+
+    # same eos with min_tokens=0 may retire earlier, never later
+    sched2 = Scheduler(eng)
+    rid2 = sched2.submit(Request(prompt=p, eos_id=eos))
+    res2 = sched2.run()
+    np.testing.assert_array_equal(res2[rid2], _expected(full, eos, 0))
+    assert len(res2[rid2]) <= len(res[rid])
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    l1=st.integers(3, 8), l2=st.integers(3, 8), l3=st.integers(3, 8),
+    e1=st.integers(1, 6), e2=st.integers(1, 6),
+)
+def test_scheduler_mixed_lengths_match_fixed(l1, l2, l3, e1, e2):
+    """Hypothesis sweep: ragged prompt lengths + per-request eos positions
+    — continuous-batching greedy output equals the per-request fixed-batch
+    output for every request, through recycling and ragged admission."""
+    eng = _fp_engine(2)
+    rng = np.random.default_rng(l1 * 64 + l2 * 8 + l3)
+    prompts = [_prompt(rng, length) for length in (l1, l2, l3)]
+    streams = [_solo_stream(p) for p in prompts]
+    eos_mins = [(int(streams[0][e1 - 1]), e1),
+                (int(streams[1][e2 - 1]), e2),
+                (None, 0)]
+    sched = Scheduler(eng)
+    for p, (eos, mn) in zip(prompts, eos_mins):
+        sched.submit(Request(prompt=p, eos_id=eos, min_tokens=mn))
+    results = sched.run()
+    for rid, (full, (eos, mn)) in enumerate(zip(streams, eos_mins)):
+        np.testing.assert_array_equal(results[rid],
+                                      _expected(full, eos, mn))
+
+
+def test_scheduler_zero_budget_and_rid_collision():
+    """A max_new_tokens=0 request returns an EMPTY stream (the prefill
+    token is not emitted), and a duplicate rid is rejected instead of
+    silently overwriting another request's results."""
+    eng = _fp_engine(2)
+    rng = np.random.default_rng(5)
+    p = _prompt(rng, 4)
+    sched = Scheduler(eng)
+    rid0 = sched.submit(Request(prompt=p, max_new_tokens=0))
+    rid1 = sched.submit(Request(prompt=p))
+    with pytest.raises(ValueError, match="duplicate rid"):
+        sched.submit(Request(prompt=p, rid=rid0))
+    results = sched.run()
+    assert len(results[rid0]) == 0
+    np.testing.assert_array_equal(results[rid1], _solo_stream(p))
+
+
+def test_generate_eos_stops_early_and_pads():
+    """EngineConfig.eos_id reaches the compat wrapper: rows stop the step
+    they emit eos, pad with it, and the loop early-exits (fewer decode
+    steps than the fixed horizon)."""
+    rng = np.random.default_rng(2)
+    p = _prompt(rng, 6)
+    full = _solo_stream(p)
+    eos = int(full[0])
+    eng = _fp_engine(1, eos_id=eos)
+    out = eng.generate(p[None])
+    assert out.shape == (1, 6)
+    assert (out == eos).all()  # one emitted token + eos padding
+    # retired on the prefill token -> whole-loop early exit, zero decode
+    # steps (the no-eos horizon would run max_new - 1 = 5)
+    assert eng.last_stats.steps == 0
+
+
+def test_generate_seed_reproducible():
+    """EngineConfig.seed drives sampled decoding: same seed -> identical
+    streams, different seed -> different streams, and the first token no
+    longer reuses the step key (the PRNG satellite fix)."""
+    rng = np.random.default_rng(3)
+    prompts = np.stack([_prompt(rng, 5), _prompt(rng, 5)])
+    out_a = _fp_engine(2, temperature=0.8, seed=5).generate(prompts)
+    out_b = _fp_engine(2, temperature=0.8, seed=5).generate(prompts)
+    out_c = _fp_engine(2, temperature=0.8, seed=6).generate(prompts)
+    np.testing.assert_array_equal(out_a, out_b)
+    assert not np.array_equal(out_a, out_c)
+
+
+def test_whisper_scheduler_roundtrip():
+    """Whisper through the scheduler: per-request ``frames`` prefill
+    kwargs, cross+self cache insertion, and generate()-wrapper parity."""
+    spec = registry.get("whisper-base")
+    cfg = spec.smoke
+    ctx = QCtx(policy=QuantPolicy.full_precision(), compute_dtype=jnp.float32)
+    from repro.models import whisper
+    params = whisper.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    frames = rng.standard_normal((2, cfg.t_enc, cfg.d_model)).astype(
+        np.float32)
+    prompts = rng.integers(0, cfg.vocab_size, (2, 5)).astype(np.int32)
+
+    eng = Engine(spec, cfg, ctx, params,
+                 EngineConfig(batch=2, cache_len=32, max_new_tokens=4))
+    out = eng.generate(prompts, frames=frames)
+    assert out.shape == (2, 4)
+
+    eng1 = Engine(spec, cfg, ctx, params,
+                  EngineConfig(batch=1, cache_len=32, max_new_tokens=4))
+    for i in range(2):
+        solo = eng1.generate(prompts[i][None], frames=frames[i][None])
+        np.testing.assert_array_equal(out[i], solo[0])
 
 
 def test_continuous_positions_decode():
