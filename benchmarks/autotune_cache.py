@@ -8,9 +8,14 @@ Shapes covered (the dispatch-routed GEMMs the smoke gate actually hits):
 
 * fig1 conv-mapped sweep (M=filters, K=k*k*Cin, N=batch*spatial^2) in its
   --smoke form, 1-bit backends;
-* the kbit sweep / k-bit equivalence shapes, ``vpu-k{2,4,8}`` plane
-  backends;
-* the 1-bit equivalence spot-check shape.
+* the kbit sweep / k-bit equivalence shapes, ``vpu-k{2,4,8}`` AND
+  ``mxu-k{2,4,8}`` (int8 code-lane) backends;
+* the 1-bit equivalence spot-check shape;
+* the decode family's serving shapes — M in {1, 8, 32, 64} at the
+  serving (N, K), both k-bit families at the swept widths — so the
+  decode latency rows (the mxu-k vs vpu-k acceptance comparison) run on
+  measured tiles, M=1 rows included (the bm-clamp heuristic rows these
+  entries override).
 
 ``--full`` adds the full-size fig1/kbit sweep shapes (slow on a CPU rig:
 the Pallas kernels autotune in interpret mode there — winners are only
@@ -46,21 +51,30 @@ def conv_shape(filters, kernel, channels, batch, spatial):
     return filters, batch * spatial * spatial, _kw(kernel * kernel * channels)
 
 
+_KBIT_BOTH = ("vpu-k2", "mxu-k2", "vpu-k4", "mxu-k4", "vpu-k8", "mxu-k8")
+
+
 def shapes(full: bool):
     # fig1 --smoke sweep: filters=16, kernel=3, batch=16, spatial=2
     for ch in (16, 32):
         yield conv_shape(16, 3, ch, 16, 2), ("vpu", "mxu")
     # kbit --smoke sweep + k-bit equivalence: (M, K, N) = (32, 288, 16)
-    yield (32, 16, _kw(288)), ("vpu", "mxu", "vpu-k2", "vpu-k4", "vpu-k8")
+    yield (32, 16, _kw(288)), ("vpu", "mxu") + _KBIT_BOTH
     # k-bit equivalence row shape (32, 256, 24)
-    yield (32, 24, _kw(256)), ("vpu-k2", "vpu-k4", "vpu-k8")
+    yield (32, 24, _kw(256)), _KBIT_BOTH
     # 1-bit equivalence spot check: (64, 512, 48)
     yield (64, 48, _kw(512)), ("vpu", "mxu")
+    # decode --smoke serving shape (N=64, K=512) at the swept widths
+    for m in (1, 8, 32, 64):
+        yield (m, 64, _kw(512)), ("vpu-k4", "mxu-k4", "vpu-k8", "mxu-k8")
     if full:
         for ch in (64, 128, 256, 512):  # fig1 full: kernel=5, spatial=4
             yield conv_shape(64, 5, ch, 200, 4), ("vpu", "mxu")
         # kbit full sweep: (128, 2304, 64)
-        yield (128, 64, _kw(2304)), ("vpu-k2", "vpu-k4", "vpu-k8")
+        yield (128, 64, _kw(2304)), _KBIT_BOTH
+        # decode full serving shape (N=1024, K=4096)
+        for m in (1, 8, 32, 64):
+            yield (m, 1024, _kw(4096)), _KBIT_BOTH
 
 
 def main() -> None:

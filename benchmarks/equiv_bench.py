@@ -69,9 +69,9 @@ def rows(small: bool = False):
             quant.weight_codes(wk.T, bits), bits
         )
         want = np.asarray(ref.dorefa_gemm_ref(ak, wk, bits, bits))
-        backends = ("xla", f"vpu-k{bits}")
-        if bits == 4 and n_dev >= 2:  # sharded k-bit plane gate row
-            backends += (f"shard-vpu-k{bits}",)
+        backends = ("xla", f"vpu-k{bits}", f"mxu-k{bits}")
+        if bits == 4 and n_dev >= 2:  # sharded k-bit plane gate rows
+            backends += (f"shard-vpu-k{bits}", f"shard-mxu-k{bits}")
         for backend in backends:
             cfg = GemmConfig(
                 backend=backend,

@@ -268,6 +268,133 @@ def shard_rows(small: bool = False):
                 }
 
 
+# ---------------------------------------------------------------------------
+# Beyond-paper: decode-shape latency — the serving regime the mxu-k*
+# backends target.  Autoregressive decode runs the quantized GEMM at tiny
+# M (the in-flight batch) against fixed serving (N, K); the plane-popcount
+# path pays ka*kb plane-pair passes regardless of M while the int8
+# code-lane MXU path pays one dot, so the win should show exactly here.
+# Rows time the full fused-prologue from-float path (dispatch.quant_gemm)
+# for dense f32 vs vpu-k{bits} vs mxu-k{bits} at M in {1, 8, 32, 64}.
+# Every row carries ``exact_match``: the mxu-k result must be BIT-identical
+# to the vpu-k result (same raw (S, T) -> same fp32 dequant) and both must
+# match the fake-quant oracle to fp32 rounding.  The overlap rows gate
+# ``GemmConfig.overlap_collective`` — the chunked ppermute ring on the
+# sharded "k" layout must be bit-identical to the sequential-psum default
+# at every split, overlap on AND off.  All rows are covered by the CI
+# bench-smoke --fail-on-mismatch gate.
+# ---------------------------------------------------------------------------
+
+
+def decode_rows(small: bool = False):
+    from repro.core import quant
+    from repro.kernels import dispatch, ref
+    from repro.kernels.dispatch import GemmConfig
+
+    n, k = (64, 512) if small else (1024, 4096)
+    bits_sweep = (4, 8) if small else (2, 4, 8)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+
+    def run(cfg, x, w_planes, bits):
+        return dispatch.quant_gemm(x, w_planes, k_true=k, config=cfg,
+                                   w_bits=bits, a_bits=bits)
+
+    planes = {
+        bits: bitpack.pack_planes(quant.weight_codes(w.T, bits), bits)
+        for bits in bits_sweep
+    }
+    for bits in bits_sweep:
+        w_planes = planes[bits]
+        cfg_v = GemmConfig(backend=f"vpu-k{bits}")
+        cfg_m = GemmConfig(backend=f"mxu-k{bits}")
+        for m in (1, 8, 32, 64):
+            x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+            want = np.asarray(ref.dorefa_gemm_ref(x, w, bits, bits))
+            # the correctness runs double as the first jit warm-up; decode
+            # calls are sub-ms here, so report the min over repeated
+            # timing blocks (single-block means swing 2x on a shared host)
+            got_v = np.asarray(run(cfg_v, x, w_planes, bits))
+            got_m = np.asarray(run(cfg_m, x, w_planes, bits))
+            t_dense = min(_time(_dense, x, w) for _ in range(3))
+            t_v = min(_time(run, cfg_v, x, w_planes, bits, warmup=1,
+                            iters=5) for _ in range(3))
+            t_m = min(_time(run, cfg_m, x, w_planes, bits, warmup=1,
+                            iters=5) for _ in range(3))
+            exact = bool(
+                (got_m == got_v).all()
+                and np.allclose(got_m, want, rtol=1e-5, atol=1e-4)
+            )
+            yield {
+                "M": m, "N": n, "K": k, "bits": bits,
+                "plane_pairs": bits * bits,
+                "dense_f32_us": round(t_dense, 1),
+                "vpu_k_us": round(t_v, 1),
+                "mxu_k_us": round(t_m, 1),
+                "mxu_speedup_vs_vpu": round(t_v / t_m, 2),
+                "exact_match": exact,
+            }
+
+
+def overlap_rows(small: bool = False):
+    """overlap_collective gate: ring reduce-scatter == sequential psum ==
+    single device on the sharded "k" layout (the decode serving layout),
+    bit-identical for both k-bit families.  Split from ``decode_rows`` so
+    the single-device decode latency sweep can run WITHOUT the virtual
+    multi-device platform split (which divides the host thread pool and
+    distorts single-device timings); this family needs the devices and
+    runs alongside the other shard benches.  Like shard_rows, a smoke run
+    without devices emits an explicit failing row instead of silently
+    going vacuously green."""
+    from repro.core import quant
+    from repro.kernels import dispatch
+    from repro.kernels.dispatch import GemmConfig
+
+    n, k = (64, 512) if small else (1024, 4096)
+    bits_sweep = (4, 8) if small else (2, 4, 8)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+
+    def run(cfg, x, w_planes, bits):
+        return dispatch.quant_gemm(x, w_planes, k_true=k, config=cfg,
+                                   w_bits=bits, a_bits=bits)
+
+    ndev = len(jax.devices())
+    if ndev < 2:
+        if small:
+            yield {
+                "backend": "shard-*-k8/overlap", "ways": 0, "devices": ndev,
+                "error": "overlap gate needs >= 2 devices (set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)",
+                "exact_match": False,
+            }
+        return
+    bits = max(bits_sweep)
+    w_planes = bitpack.pack_planes(quant.weight_codes(w.T, bits), bits)
+    m = 8
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    for ways in (2, 4):
+        if ways > ndev:
+            continue
+        mesh = jax.make_mesh((ways,), ("model",))
+        for fam in ("vpu", "mxu"):
+            base = np.asarray(
+                run(GemmConfig(backend=f"{fam}-k{bits}"), x, w_planes, bits))
+            for overlap in (False, True):
+                cfg = GemmConfig(backend=f"shard-{fam}", mesh=mesh,
+                                 shard_layout="k",
+                                 overlap_collective=overlap)
+                got = np.asarray(run(cfg, x, w_planes, bits))
+                t_us = _time(run, cfg, x, w_planes, bits, warmup=0, iters=2)
+                yield {
+                    "backend": f"shard-{fam}-k{bits}/k", "ways": ways,
+                    "overlap": overlap, "M": m, "N": n, "K": k,
+                    "bits": bits, "devices": ndev,
+                    "sharded_us": round(t_us, 1),
+                    "exact_match": bool((got == base).all()),
+                }
+
+
 def kbit_rows(small: bool = False):
     """Sweep bit width k over a fixed conv-mapped GEMM (jnp/XLA reference
     path, like the fig1-3 rows; the Pallas plane kernel is correctness-

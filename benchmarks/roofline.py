@@ -1,6 +1,28 @@
 """Roofline aggregation: read experiments/dryrun/*.json and print the
 §Roofline table (per arch x shape x mesh x quant: three terms, bottleneck,
-useful-flop fraction, fits-HBM verdict)."""
+useful-flop fraction, fits-HBM verdict).
+
+``--kbit`` instead prints the k-bit GEMM *path* model — the two ways the
+dispatch layer can contract a DoReFa plane stack, side by side:
+
+* popcount (``vpu-k*``): ``ka*kb`` AND+popcount plane-pair passes,
+  ``ka*kb * M*N*K/32`` VPU word-ops, no MXU use at all;
+* int8 code-lane (``mxu-k*``): a VPU unpack of ``(ka*M + kb*N)*K`` uint8
+  lanes to reassemble the codes, then ONE ``M*N*K`` int8 MAC pass on the
+  MXU.
+
+Both stream the *same* packed plane bytes HBM->VMEM (``(ka*M + kb*N)*K/8``
+plus the fp32 output), so the memory term is shared and the comparison is
+pure arithmetic intensity: the popcount path's compute grows with
+``ka*kb`` while the MXU path's is width-independent.  With ``r`` int8
+MXU MACs per VPU word-op per unit time (``--mxu-vpu-ratio``), the
+compute-side break-even is ``ka*kb = 32 / r`` — at the default r=2 that
+is ka*kb=16, i.e. **w4a4 is the break-even and w8a8 a clear MXU win**,
+matching what the decode bench family measures.  Real MXUs have r >> 2
+(the systolic array retires orders of magnitude more MACs/cycle than the
+VPU retires word-ops), which only moves the break-even *down*; the
+conservative default keeps the crossover visible inside the swept widths.
+"""
 
 from __future__ import annotations
 
@@ -39,11 +61,85 @@ def fmt_row(r) -> str:
     )
 
 
+# ---------------------------------------------------------------------------
+# --kbit: popcount vs int8-code-lane path model (see module docstring)
+# ---------------------------------------------------------------------------
+
+# v5e-flavored normalization: VPU word-op rate (one 32-lane AND+popcount+
+# accumulate step) in ops/s.  Only RATIOS matter for the path comparison;
+# the absolute scale just makes the second columns readable.
+VPU_WORD_OPS = 2.4e12
+HBM_BW = 819e9  # bytes/s, v5e
+UNPACK_LANE_COST = 1 / 8  # uint8 unpack lane-ops per VPU-word-op equivalent
+
+
+def _kbit_path_row(ka, kb, m, n, k, r):
+    """One (widths x M) row of the path model: shared bytes, per-path
+    compute ops normalized to VPU word-ops, bottleneck, winner."""
+    bytes_ = (ka * m + kb * n) * k / 8 + 4 * m * n
+    pop_ops = ka * kb * m * n * k / 32  # word-ops, VPU
+    unpack_ops = (ka * m + kb * n) * k * UNPACK_LANE_COST  # word-op equiv
+    macs = m * n * k  # int8 MACs, MXU
+    t_mem = bytes_ / HBM_BW
+    t_pop = pop_ops / VPU_WORD_OPS
+    t_mxu = unpack_ops / VPU_WORD_OPS + macs / (r * VPU_WORD_OPS)
+    return {
+        "quant": f"w{kb}a{ka}", "M": m, "N": n, "K": k,
+        "bytes": bytes_,
+        "pop_intensity": pop_ops / bytes_,
+        "mxu_intensity": (unpack_ops + macs) / bytes_,
+        "t_mem": t_mem, "t_pop": t_pop, "t_mxu": t_mxu,
+        "pop_bound": "compute" if t_pop > t_mem else "memory",
+        "mxu_bound": "compute" if t_mxu > t_mem else "memory",
+        "winner": ("mxu-k" if max(t_mxu, t_mem) < max(t_pop, t_mem)
+                   else "vpu-k" if max(t_pop, t_mem) < max(t_mxu, t_mem)
+                   else "tie"),
+    }
+
+
+def kbit_rows(n, k, r):
+    for ka, kb in ((2, 2), (4, 4), (8, 4), (8, 8)):
+        for m in (1, 8, 32, 64):
+            yield _kbit_path_row(ka, kb, m, n, k, r)
+
+
+def print_kbit(n, k, r):
+    print(f"# k-bit GEMM path model: popcount (vpu-k*) vs int8 code-lane "
+          f"(mxu-k*), N={n} K={k}")
+    even = 32 / r
+    print(f"# shared packed-plane bytes; r={r:g} int8 MACs per VPU word-op "
+          f"-> compute break-even at ka*kb = {even:g}"
+          + (" (w4a4)" if even == 16 else ""))
+    hdr = (f"{'quant':<6} {'M':>3}  {'pop ops/B':>9} {'mxu ops/B':>9}  "
+           f"{'t_pop':>9} {'t_mxu':>9} {'t_mem':>9}  "
+           f"{'pop':<7} {'mxu':<7} winner")
+    print(hdr)
+    for row in kbit_rows(n, k, r):
+        print(f"{row['quant']:<6} {row['M']:>3}  "
+              f"{row['pop_intensity']:>9.2f} {row['mxu_intensity']:>9.2f}  "
+              f"{row['t_pop']:>9.2e} {row['t_mxu']:>9.2e} "
+              f"{row['t_mem']:>9.2e}  "
+              f"{row['pop_bound']:<7} {row['mxu_bound']:<7} {row['winner']}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--kbit", action="store_true",
+                    help="print the popcount vs int8-code-lane path model "
+                         "instead of the dryrun table")
+    ap.add_argument("--kbit-n", type=int, default=4096,
+                    help="serving N for --kbit (decode GEMM output width)")
+    ap.add_argument("--kbit-k", type=int, default=4096,
+                    help="serving K for --kbit")
+    ap.add_argument("--mxu-vpu-ratio", type=float, default=2.0,
+                    help="int8 MXU MACs per VPU word-op per unit time "
+                         "(conservative; real MXUs are far higher)")
     args = ap.parse_args()
+    if args.kbit:
+        print_kbit(args.kbit_n, args.kbit_k, args.mxu_vpu_ratio)
+        return
     recs = load(args.dir)
     if args.csv:
         cols = ["arch", "shape", "mesh", "quant", "status"]

@@ -12,6 +12,14 @@ BENCH files are comparable across PRs.
   kbit        beyond-paper: DoReFa bit-width sweep of the plane-packed GEMM
   shard       beyond-paper: tensor-parallel (shard-*) packed GEMM sweep
               (1/2/4/8-way; every row checks sharded == single-device)
+  decode      beyond-paper: decode-shape (M in {1,8,32,64} at serving N,K)
+              fused-prologue latency — dense f32 vs vpu-k vs mxu-k (every
+              row checks mxu == vpu == oracle).  Run WITHOUT the virtual
+              multi-device split: it divides the host thread pool and
+              distorts these single-device timings
+  overlap     beyond-paper: the overlap_collective on/off bit-identity
+              gate on the sharded "k" layout (ring reduce-scatter ==
+              sequential psum == single device; needs >= 2 devices)
   table1      model size binary vs fp (LeNet, ResNet-18)
   table2      partial binarization sizes by ResNet stage
   accuracy    Table 1/2 accuracy mechanism (synthetic data; direction only)
@@ -23,7 +31,12 @@ BENCH files are comparable across PRs.
 
 --smoke shrinks the swept shapes (the CI bench-smoke job);
 --fail-on-mismatch exits non-zero if any equivalence row disagrees with
-its oracle (the CI correctness gate).
+its oracle (the CI correctness gate).  --merge-json seeds the output from
+an existing --json file so one BENCH file can be assembled from several
+invocations with different device setups (the CI job times decode on the
+plain single-device platform, then merges the multi-device families on
+top — merged rows are re-gated by --fail-on-mismatch, and a family
+re-run in the current invocation replaces its merged copy).
 """
 
 from __future__ import annotations
@@ -57,7 +70,13 @@ def provenance() -> dict:
     }
 
 
-def _emit(table: str, rows, out):
+def _emit(table: str, rows, out, fresh: set | None = None):
+    # with --merge-json a table may be seeded from the prior file; the
+    # first emit for it THIS invocation replaces that stale copy, so
+    # re-running a family is idempotent rather than appending duplicates
+    if fresh is not None and table not in fresh:
+        fresh.add(table)
+        out[table] = []
     for r in rows:
         cols = ",".join(f"{k}={v}" for k, v in r.items())
         print(f"{table},{cols}", flush=True)
@@ -67,9 +86,14 @@ def _emit(table: str, rows, out):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig2,fig3,pack,kbit,shard,"
-                         "table1,table2,accuracy,lm_sizes,equiv,serve")
+                    help="comma list: fig1,fig2,fig3,pack,kbit,shard,decode,"
+                         "overlap,table1,table2,accuracy,lm_sizes,equiv,"
+                         "serve")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--merge-json", action="store_true",
+                    help="seed output from the existing --json file "
+                         "(multi-invocation BENCH assembly; merged rows "
+                         "are re-gated by --fail-on-mismatch)")
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes (CI bench-smoke job)")
     ap.add_argument("--fail-on-mismatch", action="store_true",
@@ -82,45 +106,62 @@ def main() -> None:
         return only is None or name in only
 
     out: dict = {"_meta": provenance()}
+    fresh: set = set()
+    if args.merge_json and args.json and os.path.exists(args.json):
+        with open(args.json) as f:
+            prior = json.load(f)
+        for tbl, rows in prior.items():
+            if tbl != "_meta":
+                out[tbl] = rows
+        print(f"# merged {len(out) - 1} table(s) from {args.json}",
+              file=sys.stderr)
     print(f"# meta,{','.join(f'{k}={v}' for k, v in out['_meta'].items())}",
           flush=True)
 
     if (want("fig1") or want("fig2") or want("fig3") or want("pack")
-            or want("kbit") or want("shard")):
+            or want("kbit") or want("shard") or want("decode")
+            or want("overlap")):
         from benchmarks import gemm_bench
         if want("fig1"):
-            _emit("fig1_channels", gemm_bench.fig1_rows(args.smoke), out)
+            _emit("fig1_channels", gemm_bench.fig1_rows(args.smoke),
+                  out, fresh)
         if want("fig2"):
-            _emit("fig2_filters", gemm_bench.fig2_rows(args.smoke), out)
+            _emit("fig2_filters", gemm_bench.fig2_rows(args.smoke), out, fresh)
         if want("fig3"):
-            _emit("fig3_kernel", gemm_bench.fig3_rows(args.smoke), out)
+            _emit("fig3_kernel", gemm_bench.fig3_rows(args.smoke), out, fresh)
         if want("pack"):
-            _emit("pack_prologue", gemm_bench.pack_rows(args.smoke), out)
+            _emit("pack_prologue", gemm_bench.pack_rows(args.smoke),
+                  out, fresh)
         if want("kbit"):
-            _emit("kbit_sweep", gemm_bench.kbit_rows(args.smoke), out)
+            _emit("kbit_sweep", gemm_bench.kbit_rows(args.smoke), out, fresh)
         if want("shard"):
-            _emit("shard_sweep", gemm_bench.shard_rows(args.smoke), out)
+            _emit("shard_sweep", gemm_bench.shard_rows(args.smoke), out, fresh)
+        if want("decode"):
+            _emit("decode", gemm_bench.decode_rows(args.smoke), out, fresh)
+        if want("overlap"):
+            _emit("overlap_gate", gemm_bench.overlap_rows(args.smoke),
+                  out, fresh)
 
     if want("table1") or want("table2") or want("lm_sizes"):
         from benchmarks import size_bench
         if want("table1"):
-            _emit("table1_sizes", size_bench.table1_rows(), out)
+            _emit("table1_sizes", size_bench.table1_rows(), out, fresh)
         if want("table2"):
-            _emit("table2_partial", size_bench.table2_rows(), out)
+            _emit("table2_partial", size_bench.table2_rows(), out, fresh)
         if want("lm_sizes"):
-            _emit("lm_packed_sizes", size_bench.lm_rows(), out)
+            _emit("lm_packed_sizes", size_bench.lm_rows(), out, fresh)
 
     if want("accuracy"):
         from benchmarks import accuracy_bench
-        _emit("accuracy_mechanism", accuracy_bench.accuracy_rows(), out)
+        _emit("accuracy_mechanism", accuracy_bench.accuracy_rows(), out, fresh)
 
     if want("equiv"):
         from benchmarks import equiv_bench
-        _emit("equivalence", equiv_bench.rows(args.smoke), out)
+        _emit("equivalence", equiv_bench.rows(args.smoke), out, fresh)
 
     if want("serve"):
         from benchmarks import serve_bench
-        _emit("serve", serve_bench.rows(args.smoke), out)
+        _emit("serve", serve_bench.rows(args.smoke), out, fresh)
 
     if args.json:
         with open(args.json, "w") as f:
@@ -130,15 +171,18 @@ def main() -> None:
     if args.fail_on_mismatch:
         # shard_sweep rows carry exact_match too (sharded == single-device),
         # pack_prologue rows gate the fused quantize->pack kernels against
-        # the jnp reference, and serve equivalence rows gate continuous-
-        # batching greedy tokens against the per-request fixed-batch engine
+        # the jnp reference, decode rows gate mxu-k == vpu-k == fake-quant
+        # oracle, overlap_gate rows gate overlap_collective on == off ==
+        # single-device, and serve equivalence rows gate continuous-batching
+        # greedy tokens against the per-request fixed-batch engine
         # (throughput rows carry no exact_match and pass through)
         rows = (out.get("equivalence", []) + out.get("shard_sweep", [])
-                + out.get("pack_prologue", []) + out.get("serve", []))
+                + out.get("pack_prologue", []) + out.get("decode", [])
+                + out.get("overlap_gate", []) + out.get("serve", []))
         if not rows:
             print("--fail-on-mismatch: no gated rows were produced "
-                  "(include 'equiv', 'shard', 'pack' and/or 'serve' in "
-                  "--only)", file=sys.stderr)
+                  "(include 'equiv', 'shard', 'pack', 'decode', 'overlap' "
+                  "and/or 'serve' in --only)", file=sys.stderr)
             raise SystemExit(1)
         bad = [r for r in rows if not r.get("exact_match", True)]
         if bad:

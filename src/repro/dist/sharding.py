@@ -70,11 +70,17 @@ def packed_gemm_pspecs(
 
     * ``"k"`` — the packed contraction (Kw) dimension partitions over
       ``axis``; every shard computes a Kw-partial raw kernel output
-      (xor-mismatch count / padded MXU dot / weighted plane popcount S)
-      and the INTEGER partials ``psum`` exactly, so pad correction and the
-      fused epilogue apply once on the reduced sum (row-parallel / down
-      projection: activations arrive K-sharded from an "n"-layout up
-      projection).
+      (xor-mismatch count / padded MXU dot / weighted plane popcount S —
+      the ``plane`` specs serve BOTH k-bit families, ``shard-vpu-k*``
+      popcount and ``shard-mxu-k*`` int8 code-lane: identical (k, rows,
+      Kw) operand layouts) and the INTEGER partials ``psum`` exactly, so
+      pad correction and the fused epilogue apply once on the reduced sum
+      (row-parallel / down projection: activations arrive K-sharded from
+      an "n"-layout up projection).  With
+      ``GemmConfig.overlap_collective`` the psum is replaced by the
+      N-chunked ppermute ring (dispatch's ``_ring_chunk_reduce``) — the
+      operand and output specs are unchanged (the ring's all_gather
+      re-replicates the output), only the reduction schedule differs.
     * ``"n"`` — weights partition over their output (N) rows, activations
       replicate, no collective (column-parallel / up+gate projection —
       output arrives N-sharded, feeding the "k"-layout down projection).

@@ -48,9 +48,19 @@ backend      operands            kernel                  pad corr.   prologue
              (4, M, Kw)          pairs                               + T
 ``vpu-k8``   8-bit plane stacks  same kernel, 64 plane   none        planes
              (8, M, Kw)          pairs                               + T
+``mxu-k2``   2-bit plane stacks  reassemble int8 code    none (pad   planes
+             (2, M, Kw)          lanes in VMEM, ONE      lanes are   + T
+                                 MXU dot (offset trick)  code 0)
+``mxu-k4``   4-bit plane stacks  same kernel — replaces  none        planes
+             (4, M, Kw)          16 popcount passes                  + T
+``mxu-k8``   8-bit plane stacks  same kernel — replaces  none        planes
+             (8, M, Kw)          64 popcount passes                  + T
 ``shard-*``  same as the inner   inner kernel under      on the      inner's,
              backend, mesh-      shard_map: Kw-partial   reduced     INSIDE
              partitioned         raw outputs + psum      sum, ONCE   the body
+                                 (or the chunked
+                                 ppermute ring when
+                                 ``overlap_collective``)
 ===========  ==================  ======================  ==========  ========
 
 Other w_bits in 2..8 (w3/w5/w6/w7) convert + serve through the ``"xla"``
@@ -59,7 +69,8 @@ Asymmetric widths (e.g. w4a8) are supported: the plane kernel takes
 ka != kb stacks and resolution follows the WEIGHT width.
 
 **Tensor-parallel serving** (the ``shard-`` family: ``shard-vpu``,
-``shard-mxu``, ``shard-vpu-k2/k4/k8``): the same Pallas kernels run under
+``shard-mxu``, ``shard-{vpu,mxu}-k2/k4/k8``): the same Pallas kernels run
+under
 ``shard_map`` on ``GemmConfig.mesh``, with the operand layouts owned by
 ``dist.sharding.packed_gemm_pspecs`` (the Megatron pair —
 ``shard_layout="k"`` partitions the packed Kw dimension over
@@ -121,6 +132,10 @@ from repro.kernels.kbit_gemm import (
     kbit_plane_gemm_batched_pallas,
     kbit_plane_gemm_pallas,
 )
+from repro.kernels.kbit_mxu import (
+    kbit_mxu_gemm_batched_pallas,
+    kbit_mxu_gemm_pallas,
+)
 from repro.kernels.pack_bits import (
     _env_interpret,
     pack_sign_pallas,
@@ -160,15 +175,29 @@ class TileConfig:
 # K-word ladder likewise.  Separate rows per backend: the MXU kernel unpacks
 # to (rows, bkw*32) int8 in VMEM so its K-step is kept smaller; the VPU
 # popcount kernel streams words and tolerates a deeper K-block.
+# The ladders start at 1 row so DECODE shapes (M = batch of 1..7 serving
+# requests) clamp bm to next-pow2(M) instead of padding up to an 8-row
+# tile — a decode GEMM at M=1 otherwise wastes 8x the VMEM rows and grid
+# work on padding.
+_DECODE_ROWS = (1, 2, 4, 8, 16, 32, 64, 128)
 _TILE_TABLE: dict[str, dict[str, tuple[int, ...]]] = {
-    "vpu": {"rows": (8, 16, 32, 64, 128), "kw": (8, 16, 32, 64)},
-    "mxu": {"rows": (8, 16, 32, 64, 128), "kw": (8, 16, 32)},
+    "vpu": {"rows": _DECODE_ROWS, "kw": (8, 16, 32, 64)},
+    "mxu": {"rows": _DECODE_ROWS, "kw": (8, 16, 32)},
     # k-bit plane backends stream ka+kb plane stacks per block, so the
     # K-step shrinks as the plane count grows (VMEM per block scales with
     # (ka + kb) * bkw words).
-    "vpu-k2": {"rows": (8, 16, 32, 64, 128), "kw": (8, 16, 32)},
-    "vpu-k4": {"rows": (8, 16, 32, 64, 128), "kw": (8, 16, 32)},
-    "vpu-k8": {"rows": (8, 16, 32, 64, 128), "kw": (8, 16)},
+    "vpu-k2": {"rows": _DECODE_ROWS, "kw": (8, 16, 32)},
+    "vpu-k4": {"rows": _DECODE_ROWS, "kw": (8, 16, 32)},
+    "vpu-k8": {"rows": _DECODE_ROWS, "kw": (8, 16)},
+    # int8 code-lane MXU k-bit backends (kernels/kbit_mxu.py): both
+    # operands unpack to (rows, bkw*32) int8 in VMEM, so the K-step
+    # matches the 1-bit MXU ladder (k8 keeps it shallower — two 8-plane
+    # stacks stream per block on top of the int8 lanes, and the unpack
+    # intermediates scale with plane count x bkw, so k8 also offers a
+    # bkw=4 step that keeps them resident in the fastest tile memory).
+    "mxu-k2": {"rows": _DECODE_ROWS, "kw": (8, 16, 32)},
+    "mxu-k4": {"rows": _DECODE_ROWS, "kw": (8, 16, 32)},
+    "mxu-k8": {"rows": _DECODE_ROWS, "kw": (4, 8, 16)},
 }
 _DEFAULT_CHUNK_WORDS = 8
 
@@ -286,6 +315,7 @@ def autotune_tiles(
     backend: str = "vpu",
     *,
     iters: int = 2,
+    repeats: int = 3,
     persist: bool = True,
 ) -> TileConfig:
     """Benchmark the tile candidates for one (M, N, Kw, backend) problem
@@ -333,11 +363,16 @@ def autotune_tiles(
             return be.gemm(ap, bp, k_true, cand, cfg)
 
         jax.block_until_ready(run())  # compile outside the timed region
-        t0 = _time.perf_counter()
-        for _ in range(iters):
-            out = run()
-        jax.block_until_ready(out)
-        dt = (_time.perf_counter() - t0) / iters
+        # min over repeated blocks: single-block means on a shared host
+        # are noisy enough (2x swings) to crown a wrong winner that then
+        # ships in the committed cache
+        dt = float("inf")
+        for _ in range(repeats):
+            t0 = _time.perf_counter()
+            for _ in range(iters):
+                out = run()
+            jax.block_until_ready(out)
+            dt = min(dt, (_time.perf_counter() - t0) / iters)
         if best is None or dt < best[0]:
             best = (dt, cand)
     assert best is not None
@@ -391,6 +426,20 @@ class GemmConfig:
     rows in the ``"n"`` layout), ``shard_layout`` (``"k"`` | ``"n"``, see
     ``dist.sharding.packed_gemm_pspecs``), and ``expert_axis`` (optional
     second mesh axis for expert parallelism on the grouped path).
+
+    ``overlap_collective`` switches the ``"k"`` layout's contraction
+    reduction from one monolithic ``psum`` (the safe default) to the
+    ``collective_matmul``-style ring schedule (:func:`_ring_chunk_reduce`):
+    the weight N rows split into per-shard chunks, each shard's raw int32
+    partial for one chunk rides a ``ppermute`` ring while the NEXT chunk's
+    GEMM runs, so the collective hops hide behind compute — and because no
+    full-width psum barrier remains at the layer boundary, the next
+    layer's fused in-body quantize->pack prologue starts while the last
+    hops drain.  Raw partials are int32 and integer addition is exact in
+    any order, so results are BIT-IDENTICAL to the sequential path (CI
+    gates this).  Honored by the dense float-activation ``"k"``-layout
+    paths (1-bit and k-bit, all shard families); the packed-operand and
+    grouped paths keep the sequential psum.
     """
 
     backend: str = "vpu"
@@ -406,6 +455,7 @@ class GemmConfig:
     expert_axis: str | None = None
     fused_prologue: bool = True
     capacity_factor: float | None = None
+    overlap_collective: bool = False
 
     def tiles(self, m: int, n: int, kw: int,
               backend: str | None = None) -> TileConfig:
@@ -624,34 +674,47 @@ def get_backend(name: str) -> Backend:
 _SHARD_PREFIX = "shard-"
 
 
+def _family(base: str) -> str:
+    """The kernel family of an UNPREFIXED backend name: ``"mxu-k4"`` ->
+    ``"mxu"``, ``"vpu"`` -> ``"vpu"`` (plane entries are ``family-kN``)."""
+    return base.split("-k", 1)[0]
+
+
 def resolve_backend(name: str, w_bits: int) -> str:
     """Map a base backend name + the layer's weight bit width onto the
     registry entry that executes it (the paper's full 1..k family behind
-    one config knob):
+    one config knob).  Resolution is FAMILY-aware: ``"mxu"`` resolves onto
+    the ``mxu-k*`` int8 code-lane entries and ``"vpu"`` onto the plane
+    popcount entries (likewise their ``shard-`` twins):
 
     * ``w_bits == 1`` — the name is used as-is (the 1-bit entries), except
       that a plane backend down-resolves to its family's 1-bit entry
-      (``"vpu"``, or ``"shard-vpu"`` for the tensor-parallel family —
+      (``"mxu-k4"`` -> ``"mxu"``, ``"shard-vpu-k2"`` -> ``"shard-vpu"`` —
       plane entries have no ±1 kernel, and per-layer policies mix 1-bit
       and k-bit layers under one configured base name).
-    * an entry that already handles ``w_bits`` (a matching ``vpu-kN`` or a
+    * an entry that already handles ``w_bits`` (a matching ``*-kN`` or a
       ``from_float_kbit`` fallback like ``"xla"``) — used as-is.
-    * otherwise the family's ``vpu-k{w_bits}`` when registered
-      (``shard-vpu-k{w_bits}`` for shard base names), else the ``"xla"``
-      dequant fallback (w3/w5/... stay correct, just not plane-packed).
+    * otherwise the family's ``{family}-k{w_bits}`` when registered
+      (``shard-{family}-k{w_bits}`` for shard base names), then
+      ``vpu-k{w_bits}`` as the plane fallback, else the ``"xla"`` dequant
+      fallback (w3/w5/... stay correct, just not plane-packed).
     """
     prefix = _SHARD_PREFIX if name.startswith(_SHARD_PREFIX) else ""
+    base = name[len(prefix):]
+    fam = _family(base)
     if w_bits <= 1:
         be = _REGISTRY.get(name)
         if be is not None and be.bits > 1:
-            return prefix + "vpu"
+            one = prefix + fam
+            return one if one in _REGISTRY else prefix + "vpu"
         return name
     be = get_backend(name)  # unknown base names raise here, not fall back
     if be.bits == w_bits or be.from_float_kbit is not None:
         return name
-    kname = f"{prefix}vpu-k{w_bits}"
-    if kname in _REGISTRY:
-        return kname
+    for fallback_fam in (fam, "vpu"):
+        kname = f"{prefix}{fallback_fam}-k{w_bits}"
+        if kname in _REGISTRY:
+            return kname
     if prefix:
         # the xla dequant fallback is single-device: a shard-* base name
         # at a width with no plane entry silently loses its configured
@@ -871,6 +934,40 @@ def _check_kbit_accumulator(k_true: int, a_bits: int, w_bits: int) -> None:
         )
 
 
+def _check_kbit_accumulator_mxu(k_true: int, a_bits: int,
+                                w_bits: int) -> None:
+    """Re-derived bound for the int8 code-lane MXU path
+    (kernels/kbit_mxu.py): ONE int32 partial per output element
+    accumulates the FULL code dot ``S <= K * Na * Nw`` — not the popcount
+    path's ``<= K`` per plane-pair pass with the ``2^(i+j)`` weights
+    applied after — and the dequant numerator ``2S - Nw*T`` doubles it.
+    The offset-dot cross terms the kernel actually sums are each smaller
+    than the restored S, so the binding ceiling is numerically the SAME
+    ``2 * K * Na * Nw < 2^31`` as the popcount path; it is re-checked
+    here separately so the failure names the single-partial int8
+    accumulation."""
+    bound = 2 * k_true * ((1 << a_bits) - 1) * ((1 << w_bits) - 1)
+    if bound >= 2**31:
+        raise ValueError(
+            f"k-bit MXU GEMM overflows its int32 accumulator: the int8 "
+            f"code-lane path sums the full code dot in ONE int32 partial "
+            f"per element, and K={k_true} at w{w_bits}a{a_bits} needs "
+            f"2*K*Na*Nw = {bound} >= 2^31; split the contraction, reduce "
+            "the bit width, or use the plane popcount backend with a "
+            "sharded K split"
+        )
+
+
+def _accum_check_for(name: str):
+    """The trace-time int32 bound check matching a RESOLVED backend name:
+    the ``mxu-k*`` families accumulate the full code dot per partial and
+    get the re-derived check; everything else keeps the plane-pair one."""
+    base = name[len(_SHARD_PREFIX):] if name.startswith(_SHARD_PREFIX) \
+        else name
+    return (_check_kbit_accumulator_mxu if _family(base) == "mxu"
+            else _check_kbit_accumulator)
+
+
 def _pad_planes(a: jax.Array, b: jax.Array, tiles: TileConfig):
     """Pad (…, ka, M, Kw) and (…, kb, N, Kw) plane stacks up to tile
     multiples.  Zero words AND to zero, so padding needs no correction."""
@@ -895,6 +992,34 @@ def _vpu_kbit_gemm_grouped(buckets, w_stack, tiles, config):
         buckets, w_stack, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw,
         chunk_words=tiles.chunk_words, interpret=config._interpret,
     )[:, :m, :n]
+
+
+def _mxu_kbit_gemm(a_planes, b_planes, tiles, config):
+    """int8 code-lane MXU S (kernels/kbit_mxu.py) — bit-identical to
+    ``_vpu_kbit_gemm`` (integer arithmetic only), one MXU contraction per
+    tile instead of ka*kb popcount passes."""
+    m, n = a_planes.shape[1], b_planes.shape[1]
+    a_planes, b_planes = _pad_planes(a_planes, b_planes, tiles)
+    return kbit_mxu_gemm_pallas(
+        a_planes, b_planes, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw,
+        interpret=config._interpret,
+    )[:m, :n]
+
+
+def _mxu_kbit_gemm_grouped(buckets, w_stack, tiles, config):
+    m, n = buckets.shape[2], w_stack.shape[2]
+    buckets, w_stack = _pad_planes(buckets, w_stack, tiles)
+    return kbit_mxu_gemm_batched_pallas(
+        buckets, w_stack, bm=tiles.bm, bn=tiles.bn, bkw=tiles.bkw,
+        interpret=config._interpret,
+    )[:, :m, :n]
+
+
+# single-device k-bit raw seams per family: the shard-* k-bit backends
+# run one of these inside their shard_map bodies
+_KBIT_GEMM = {"vpu": _vpu_kbit_gemm, "mxu": _mxu_kbit_gemm}
+_KBIT_GEMM_GROUPED = {"vpu": _vpu_kbit_gemm_grouped,
+                      "mxu": _mxu_kbit_gemm_grouped}
 
 
 def _xla_kbit_s(a_planes, b_planes, tiles, config):
@@ -1055,10 +1180,15 @@ def _shard_gemm_grouped(inner, buckets, w_stack, k_true, tiles, config):
     return (dot - mxu_pad_inflation(words, k_true))[:e]
 
 
-def _shard_kbit_gemm(a_planes, b_planes, tiles, config):
+def _shard_kbit_gemm(family, a_planes, b_planes, tiles, config):
+    """Tensor-parallel raw S for the ``shard-{family}-k*`` backends:
+    ``family`` ("vpu" | "mxu") picks the per-shard kernel; the shard
+    structure (pspecs, psum of raw S, no correction anywhere) is
+    family-independent — pad words unpack to plane-AND 0 / code 0."""
     del tiles
-    mesh, axis, ns, _ = _shard_ctx(config, "backend 'shard-vpu-k*'")
-    inner = f"vpu-k{b_planes.shape[0]}"  # tile-table row (falls back fine)
+    kernel = _KBIT_GEMM[family]
+    mesh, axis, ns, _ = _shard_ctx(config, f"backend 'shard-{family}-k*'")
+    inner = f"{family}-k{b_planes.shape[0]}"  # tile-table row
     m, n = a_planes.shape[1], b_planes.shape[1]
     if config.shard_layout == "n":
         part = packed_gemm_pspecs("n", axis, planes=True)
@@ -1067,7 +1197,7 @@ def _shard_kbit_gemm(a_planes, b_planes, tiles, config):
                          backend=inner)
 
         def body_n(a_loc, b_loc):
-            return _vpu_kbit_gemm(a_loc, b_loc, t, config)
+            return kernel(a_loc, b_loc, t, config)
 
         out = shard_map(body_n, mesh=mesh, in_specs=(part.a, part.w),
                         out_specs=part.out, check_vma=False)(a_planes, b_p)
@@ -1078,17 +1208,19 @@ def _shard_kbit_gemm(a_planes, b_planes, tiles, config):
     t = config.tiles(m, n, a_p.shape[-1] // ns, backend=inner)
 
     def body_k(a_loc, b_loc):
-        # raw S needs no pad correction anywhere: zero plane words AND to 0
-        return jax.lax.psum(_vpu_kbit_gemm(a_loc, b_loc, t, config),
+        # raw S needs no pad correction anywhere: zero plane words AND to
+        # 0 on the popcount path, unpack to code 0 on the int8 MXU path
+        return jax.lax.psum(kernel(a_loc, b_loc, t, config),
                             part.reduce_axis)
 
     return shard_map(body_k, mesh=mesh, in_specs=(part.a, part.w),
                      out_specs=part.out, check_vma=False)(a_p, b_p)
 
 
-def _shard_kbit_gemm_grouped(buckets, w_stack, tiles, config):
+def _shard_kbit_gemm_grouped(family, buckets, w_stack, tiles, config):
     del tiles
-    mesh, axis, ns, es = _shard_ctx(config, "backend 'shard-vpu-k*' "
+    kernel = _KBIT_GEMM_GROUPED[family]
+    mesh, axis, ns, es = _shard_ctx(config, f"backend 'shard-{family}-k*' "
                                             "(grouped)")
     e, ec = buckets.shape[0], buckets.shape[2]
     kb, n = w_stack.shape[1], w_stack.shape[2]
@@ -1096,10 +1228,10 @@ def _shard_kbit_gemm_grouped(buckets, w_stack, tiles, config):
                               planes=True, grouped=True)
     b_p = _pad_axis(_pad_axis(buckets, 0, es), 3, ns)
     w_p = _pad_axis(_pad_axis(w_stack, 0, es), 3, ns)
-    t = config.tiles(ec, n, b_p.shape[-1] // ns, backend=f"vpu-k{kb}")
+    t = config.tiles(ec, n, b_p.shape[-1] // ns, backend=f"{family}-k{kb}")
 
     def body(b_loc, wl):
-        return jax.lax.psum(_vpu_kbit_gemm_grouped(b_loc, wl, t, config),
+        return jax.lax.psum(kernel(b_loc, wl, t, config),
                             part.reduce_axis)
 
     s = shard_map(body, mesh=mesh, in_specs=(part.a, part.w),
@@ -1133,6 +1265,39 @@ def _pad_k_float(x: jax.Array, k_pad: int) -> jax.Array:
     return jnp.pad(x, widths, constant_values=-1.0)  # bit 0 / code 0
 
 
+def _ring_chunk_reduce(compute_chunk, *, axis, ns, m, nc):
+    """``collective_matmul``-style ring reduce-scatter of N-chunked raw
+    int32 partials (``GemmConfig.overlap_collective``).
+
+    ``compute_chunk(c) -> (m, nc) int32`` is this shard's raw partial
+    (over its local Kw slab) for output-column chunk ``c``; must be called
+    inside a shard_map body over ``axis`` with ``ns`` shards.  Instead of
+    one monolithic ``psum`` of the full (m, ns*nc) partial — a barrier no
+    compute hides behind — each shard walks the ring: compute one chunk's
+    partial, add it to the accumulator arriving from the ring predecessor,
+    ``ppermute`` onward, and start the NEXT chunk's GEMM while the hop is
+    in flight.  After ns-1 hops shard ``i`` owns the fully-reduced chunk
+    ``i``; a final ``all_gather`` rebuilds the replicated (m, ns*nc) S.
+    The chunk schedule (shard ``i`` computes chunk ``i + ns - 1 - t`` at
+    step ``t``) is exactly the reduce-scatter matmul of Wang et al.'s
+    collective-matmul decomposition, applied to the raw integer partials.
+
+    Because every partial is int32 and integer addition is exact in any
+    order, the result is BIT-IDENTICAL to the sequential psum — CI gates
+    overlap-on vs overlap-off on equality, not tolerance.  ``ns == 1``
+    degenerates to a single chunk computation with no collective."""
+    if ns == 1:
+        return compute_chunk(0)
+    idx = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % ns) for i in range(ns)]
+    acc = compute_chunk((idx + ns - 1) % ns)
+    for t in range(1, ns):
+        acc = jax.lax.ppermute(acc, axis, perm)
+        acc = acc + compute_chunk((idx + ns - 1 - t) % ns)
+    gathered = jax.lax.all_gather(acc, axis, axis=0)  # (ns, m, nc)
+    return jnp.moveaxis(gathered, 0, 1).reshape(m, ns * nc)
+
+
 def _shard_from_float(inner, x2, w_packed, k_true, config):
     """1-bit tensor-parallel GEMM from float activations, prologue inside
     the shard_map body (see the section comment)."""
@@ -1149,6 +1314,33 @@ def _shard_from_float(inner, x2, w_packed, k_true, config):
     x_p = _pad_k_float(x2, k_pad)
     w_p = _pad_axis(w_packed, 1, ns)
     part = packed_gemm_pspecs("k", axis, prologue=True)
+    if config.overlap_collective:
+        # ring-overlap variant: raw partials reduce-scatter chunk-wise
+        # (see _ring_chunk_reduce) instead of one psum; bit-identical
+        nc = _round_up(n, ns) // ns
+        w_p = _pad_axis(w_p, 0, ns)
+        t = config.tiles(m, nc, kw_loc, backend=inner)
+
+        def body_ring(a_loc, b_loc):
+            ap = pack_activations(a_loc, use_pallas=fused, interpret=interp)
+
+            def chunk(c):
+                b_c = jax.lax.dynamic_slice_in_dim(b_loc, c * nc, nc,
+                                                   axis=0)
+                if inner == "vpu":
+                    return _vpu_raw(ap, b_c, t, interp)
+                return _mxu_raw(ap, b_c, t, interp)[0]
+
+            return _ring_chunk_reduce(chunk, axis=part.reduce_axis, ns=ns,
+                                      m=m, nc=nc)
+
+        raw = shard_map(body_ring, mesh=mesh, in_specs=(part.a, part.w),
+                        out_specs=part.out, check_vma=False)(x_p, w_p)
+        raw = raw[:, :n]
+        if inner == "vpu":
+            return k_true - 2 * raw
+        return raw - mxu_pad_inflation(ns * _round_up(kw_loc, t.bkw),
+                                       k_true)
     t = config.tiles(m, n, kw_loc, backend=inner)
     if inner == "vpu":
 
@@ -1172,13 +1364,19 @@ def _shard_from_float(inner, x2, w_packed, k_true, config):
     return dot - mxu_pad_inflation(ns * _round_up(kw_loc, t.bkw), k_true)
 
 
-def _shard_kbit_from_float(x2, w_planes, a_bits, w_bits, k_true, config):
+def _shard_kbit_from_float(family, x2, w_planes, a_bits, w_bits, k_true,
+                           config):
     """k-bit tensor-parallel DoReFa dot from float activations: the fused
     quantize->plane-pack prologue runs inside the shard_map body ("k"
     layout — raw S and the code row-sums T both psum exactly) or once
-    before it ("n"); the dequant rewrite runs once on the sums."""
-    mesh, axis, ns, _ = _shard_ctx(config, "backend 'shard-vpu-k*'")
-    _check_kbit_accumulator(k_true, a_bits, w_bits)
+    before it ("n"); the dequant rewrite runs once on the sums.
+    ``family`` ("vpu" | "mxu") picks the per-shard S kernel; with
+    ``config.overlap_collective`` the "k" layout reduces S over the
+    chunked ppermute ring instead (T, an (M, 1) sliver, keeps the plain
+    psum — nothing hides behind a collective that small)."""
+    kernel = _KBIT_GEMM[family]
+    mesh, axis, ns, _ = _shard_ctx(config, f"backend 'shard-{family}-k*'")
+    _accum_check_for(family)(k_true, a_bits, w_bits)
     interp = config._interpret
     fused = config.fused_prologue
     kb, n = w_planes.shape[0], w_planes.shape[1]
@@ -1186,18 +1384,41 @@ def _shard_kbit_from_float(x2, w_planes, a_bits, w_bits, k_true, config):
     if config.shard_layout == "n":
         planes, t_sum = pack_act_planes(x2, a_bits, fused=fused,
                                         interpret=interp)
-        s = _shard_kbit_gemm(planes, w_planes, None, config)
+        s = _shard_kbit_gemm(family, planes, w_planes, None, config)
         return _kbit_dequant(s, t_sum, a_bits, w_bits)
     kw_loc, k_pad = _kw_split(k_true, ns)
     x_p = _pad_k_float(x2, k_pad)
     w_p = _pad_axis(w_planes, 2, ns)
     part = packed_gemm_pspecs("k", axis, planes=True, prologue=True)
-    t = config.tiles(m, n, kw_loc, backend=f"vpu-k{kb}")
+    if config.overlap_collective:
+        nc = _round_up(n, ns) // ns
+        w_p = _pad_axis(w_p, 1, ns)
+        t = config.tiles(m, nc, kw_loc, backend=f"{family}-k{kb}")
+
+        def body_ring(a_loc, b_loc):
+            planes_loc, t_loc = pack_act_planes(a_loc, a_bits, fused=fused,
+                                                interpret=interp)
+
+            def chunk(c):
+                b_c = jax.lax.dynamic_slice_in_dim(b_loc, c * nc, nc,
+                                                   axis=1)
+                return kernel(planes_loc, b_c, t, config)
+
+            s_loc = _ring_chunk_reduce(chunk, axis=part.reduce_axis,
+                                       ns=ns, m=m, nc=nc)
+            return s_loc, jax.lax.psum(t_loc, part.reduce_axis)
+
+        s, t_sum = shard_map(body_ring, mesh=mesh,
+                             in_specs=(part.a, part.w),
+                             out_specs=(part.out, part.out),
+                             check_vma=False)(x_p, w_p)
+        return _kbit_dequant(s[:, :n], t_sum, a_bits, w_bits)
+    t = config.tiles(m, n, kw_loc, backend=f"{family}-k{kb}")
 
     def body(a_loc, b_loc):
         planes_loc, t_loc = pack_act_planes(a_loc, a_bits, fused=fused,
                                             interpret=interp)
-        s_loc = _vpu_kbit_gemm(planes_loc, b_loc, t, config)
+        s_loc = kernel(planes_loc, b_loc, t, config)
         return (jax.lax.psum(s_loc, part.reduce_axis),
                 jax.lax.psum(t_loc, part.reduce_axis))
 
@@ -1230,17 +1451,18 @@ register_backend(
         prologue="float",
     )
 )
-for _k in (2, 4, 8):
-    register_backend(
-        Backend(
-            f"vpu-k{_k}",
-            _kbit_only,
-            bits=_k,
-            gemm_kbit=_vpu_kbit_gemm,
-            gemm_kbit_grouped=_vpu_kbit_gemm_grouped,
-            prologue="pack_planes",
+for _fam in ("vpu", "mxu"):
+    for _k in (2, 4, 8):
+        register_backend(
+            Backend(
+                f"{_fam}-k{_k}",
+                _kbit_only,
+                bits=_k,
+                gemm_kbit=_KBIT_GEMM[_fam],
+                gemm_kbit_grouped=_KBIT_GEMM_GROUPED[_fam],
+                prologue="pack_planes",
+            )
         )
-    )
 for _inner in ("vpu", "mxu"):
     register_backend(
         Backend(
@@ -1251,18 +1473,21 @@ for _inner in ("vpu", "mxu"):
             prologue="pack_sign",
         )
     )
-for _k in (2, 4, 8):
-    register_backend(
-        Backend(
-            f"shard-vpu-k{_k}",
-            _kbit_only,
-            bits=_k,
-            gemm_kbit=_shard_kbit_gemm,
-            gemm_kbit_grouped=_shard_kbit_gemm_grouped,
-            from_float_kbit=_shard_kbit_from_float,
-            prologue="pack_planes",
+for _fam in ("vpu", "mxu"):
+    for _k in (2, 4, 8):
+        register_backend(
+            Backend(
+                f"shard-{_fam}-k{_k}",
+                _kbit_only,
+                bits=_k,
+                gemm_kbit=functools.partial(_shard_kbit_gemm, _fam),
+                gemm_kbit_grouped=functools.partial(
+                    _shard_kbit_gemm_grouped, _fam),
+                from_float_kbit=functools.partial(
+                    _shard_kbit_from_float, _fam),
+                prologue="pack_planes",
+            )
         )
-    )
 
 
 # ---------------------------------------------------------------------------
@@ -1373,8 +1598,8 @@ def packed_kbit_gemm(
     be = get_backend(name)
     if be.gemm_kbit is None:
         raise ValueError(f"backend {name!r} has no k-bit kernel")
-    _check_kbit_accumulator(a_planes.shape[2] * WORD_BITS,
-                            a_planes.shape[0], b_planes.shape[0])
+    _accum_check_for(name)(a_planes.shape[2] * WORD_BITS,
+                           a_planes.shape[0], b_planes.shape[0])
     tiles = config.tiles(a_planes.shape[1], b_planes.shape[1],
                          a_planes.shape[2], backend=name)
     return be.gemm_kbit(a_planes, b_planes, tiles, config)
@@ -1394,7 +1619,7 @@ def _kbit_dot_from_float(x2, w_planes, *, k_true, config, w_bits, a_bits,
     if be.from_float_kbit is not None:
         return be.from_float_kbit(x2, w_planes, a_bits, w_bits, k_true,
                                   config)
-    _check_kbit_accumulator(k_true, a_bits, w_bits)
+    _accum_check_for(name)(k_true, a_bits, w_bits)
     a_planes, t_sum = pack_act_planes(
         x2, a_bits, fused=fused, interpret=config._interpret
     )  # (ka, M, Kw), (M, 1)
@@ -1678,7 +1903,7 @@ def _kbit_grouped(x_sorted, w_stack, stacks, group_sizes, g, g_safe, pos,
         )
         return outs if isinstance(w_stack, tuple) else outs[0]
 
-    _check_kbit_accumulator(k_true, a_bits, w_bits)
+    _accum_check_for(name)(k_true, a_bits, w_bits)
     buckets, t_sum = _pack_plane_buckets(x_sorted, a_bits, g, g_safe, pos,
                                          e, ec, config)
     kw = buckets.shape[-1]

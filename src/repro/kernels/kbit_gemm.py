@@ -38,7 +38,17 @@ shard_map body and psum (S, T) pairs.
 
 int32 accumulator bound: ``S <= K * Na * Nw``, and the dequant numerator
 ``2S - Nw*T`` doubles it — dispatch rejects ``2 * K * Na * Nw >= 2^31``
-at trace time (w8a8: K < ~16.5k; w4a4: K < ~4.7M).
+at trace time (w8a8: K < ~16.5k; w4a4: K < ~4.7M).  The bound's *shape*
+differs between the two k-bit executions even though the ceiling is the
+same number: THIS kernel accumulates each plane-pair popcount pass
+separately (each pass sums at most K ones; the ``2^(i+j)`` weights are
+applied to the finished pass), so no intermediate ever exceeds the final
+S — whereas the int8 code-lane MXU path (kernels/kbit_mxu.py, the
+``mxu-k*`` backends) accumulates the FULL code dot ``<= K * Na * Nw`` in
+ONE int32 partial per output element.  Dispatch therefore re-derives the
+check per family (``_check_kbit_accumulator`` vs
+``_check_kbit_accumulator_mxu``) so an overflowing decode config fails
+naming the path that actually wraps.
 
 Both kernels tile (M, N, K) with a sequential-K innermost grid axis and the
 plane dimension carried whole in each block (ka/kb <= 8 planes: a (8, 128,

@@ -29,6 +29,17 @@ both GEMM operands, contributing nothing (see core/bitpack.py).
 callers thread ``GemmConfig.interpret`` through ``kernels/dispatch`` so a
 real-TPU config compiles the pack stage too instead of silently
 interpreting it.
+
+One plane stack serves BOTH k-bit GEMM families — the ``vpu-k*`` plane
+popcount kernels and the ``mxu-k*`` int8 code-lane kernels
+(kernels/kbit_mxu.py) consume identical (a_bits, M, Kw) stacks + T, so
+backend selection never changes this prologue.  Under the tensor-parallel
+``"k"`` layout this pass runs INSIDE the shard_map body on each shard's
+local K-slab; with ``GemmConfig.overlap_collective`` it is also the
+compute the PREVIOUS layer's in-flight ring reduction hides behind —
+dispatch's chunked ppermute schedule removes the monolithic psum barrier
+that used to separate one layer's reduction from the next layer's pack
+(see ``dispatch._ring_chunk_reduce``).
 """
 
 from __future__ import annotations

@@ -133,15 +133,20 @@ def test_resolve_backend_down_resolution():
     # 1-bit: plane backends down-resolve to their family's ±1 entry
     assert dispatch.resolve_backend("vpu-k4", 1) == "vpu"
     assert dispatch.resolve_backend("vpu-k8", 1) == "vpu"
+    assert dispatch.resolve_backend("mxu-k4", 1) == "mxu"
     assert dispatch.resolve_backend("shard-vpu-k4", 1) == "shard-vpu"
+    assert dispatch.resolve_backend("shard-mxu-k8", 1) == "shard-mxu"
     assert dispatch.resolve_backend("vpu", 1) == "vpu"
     assert dispatch.resolve_backend("shard-mxu", 1) == "shard-mxu"
     assert dispatch.resolve_backend("xla", 1) == "xla"
-    # k-bit: base names resolve onto the family's plane entry
+    # k-bit: base names resolve onto THEIR OWN family's plane entry
     assert dispatch.resolve_backend("vpu", 4) == "vpu-k4"
-    assert dispatch.resolve_backend("mxu", 2) == "vpu-k2"
+    assert dispatch.resolve_backend("mxu", 2) == "mxu-k2"
+    assert dispatch.resolve_backend("mxu", 8) == "mxu-k8"
     assert dispatch.resolve_backend("shard-vpu", 8) == "shard-vpu-k8"
-    assert dispatch.resolve_backend("shard-mxu", 4) == "shard-vpu-k4"
+    assert dispatch.resolve_backend("shard-mxu", 4) == "shard-mxu-k4"
+    # a k-bit entry asked for another width re-resolves within its family
+    assert dispatch.resolve_backend("mxu-k2", 4) == "mxu-k4"
     # widths with no plane entry fall back to the xla dequant path
     assert dispatch.resolve_backend("vpu", 5) == "xla"
     assert dispatch.resolve_backend("shard-vpu", 3) == "xla"

@@ -105,9 +105,11 @@ def test_resolve_backend_rules():
     # a plane backend asked to run a 1-bit GEMM down-resolves (per-layer
     # policies mix 1-bit and k-bit layers under one configured base name)
     assert dispatch.resolve_backend("vpu-k4", 1) == "vpu"
+    assert dispatch.resolve_backend("mxu-k4", 1) == "mxu"
     for base in ("vpu", "mxu"):
         for k in BITS:
-            assert dispatch.resolve_backend(base, k) == f"vpu-k{k}"
+            # family-aware: each base resolves onto ITS k-bit entries
+            assert dispatch.resolve_backend(base, k) == f"{base}-k{k}"
     assert dispatch.resolve_backend("xla", 4) == "xla"
     assert dispatch.resolve_backend("vpu-k4", 4) == "vpu-k4"
     # no plane backend registered for w3 -> dequant fallback
