@@ -23,6 +23,15 @@ Rows:
   float, one runs a BMXNet-converted packed checkpoint (xla backend:
   packed weights, in-graph dequant — CPU-fast) so the gate covers the
   packed serving path end-to-end.
+* ``equivalence`` / ``engine=paged`` — the SAME request set served on the
+  block-table paged KV pool with chunked prefill + prefix sharing
+  (``EngineConfig.kv_block_size``): greedy streams must stay bit-identical
+  to the per-request reference.  Also CI-gated via ``exact_match``.
+* ``shared-prefix`` — an identical-prefix request stream on the paged
+  engine with sharing off vs on: prefill work must drop by EXACTLY
+  ``(requests - batch) * prefix_len`` tokens (every request after the
+  first admission wave reuses the registered prefix blocks) with
+  bit-identical streams; both checks fold into the gated ``exact_match``.
 * ``throughput`` — useful tokens/sec both modes, speedup, decode-step
   counts, and mean time-to-first-token.  Fixed-batch TTFT is measured at
   group START (a lower bound, i.e. favouring the baseline).  The ISSUE
@@ -191,6 +200,70 @@ def rows(small: bool = False):
         "requests": len(pk_reqs), "batch": 2, "max_new": pk_max_new,
         "mismatches": len(pk_mismatch),
         "exact_match": not pk_mismatch,
+    }
+
+    # -- equivalence (paged): block-table pool + chunked prefill + prefix
+    # sharing vs the SAME per-request fixed-batch reference streams --
+    eng_paged = Engine(eng_cont.spec, eng_cont.cfg, eng_cont.ctx,
+                       eng_cont.params,
+                       EngineConfig(batch=batch, cache_len=cache_len,
+                                    max_new_tokens=max_new,
+                                    kv_block_size=8, prefill_chunk=5,
+                                    shared_prefix=True))
+    pg_results, _, pg_stats = _run_continuous(eng_paged, reqs)
+    pg_mismatch = [r.rid for r in reqs
+                   if not np.array_equal(pg_results[r.rid],
+                                         expected[r.rid])]
+    yield {
+        "mode": "equivalence", "engine": "paged", "requests": len(reqs),
+        "batch": batch, "max_new": max_new, "kv_block_size": 8,
+        "prefill_chunk": 5,
+        "prefill_tokens": pg_stats.prefill_tokens,
+        "shared_tokens": pg_stats.shared_tokens,
+        "mismatches": len(pg_mismatch),
+        "exact_match": not pg_mismatch,
+    }
+
+    # -- shared-prefix throughput: identical-prefix stream, paged engine
+    # with and without sharing.  Every request after the first admission
+    # wave reuses the prefix's full blocks, so prefill work must drop by
+    # exactly (requests - batch) * prefix_len tokens — gated alongside
+    # stream identity --
+    sp_batch, sp_new, sp_bs, prefix_len, n_sp = 2, 8, 8, 16, 6
+    prefix = rng.integers(0, cfg.vocab_size, (prefix_len,)).astype(np.int32)
+    sp_reqs = []
+    for i in range(n_sp):
+        suffix = rng.integers(0, cfg.vocab_size, (1 + i,)).astype(np.int32)
+        sp_reqs.append(Request(prompt=np.concatenate([prefix, suffix]),
+                               rid=i))
+
+    def _sp_engine(share):
+        return Engine(eng_cont.spec, eng_cont.cfg, eng_cont.ctx,
+                      eng_cont.params,
+                      EngineConfig(batch=sp_batch, cache_len=cache_len,
+                                   max_new_tokens=sp_new,
+                                   kv_block_size=sp_bs,
+                                   shared_prefix=share))
+
+    base_res, _, base_stats = _run_continuous(_sp_engine(False), sp_reqs)
+    sh_res, _, sh_stats = _run_continuous(_sp_engine(True), sp_reqs)
+    # warmed second passes for the timing comparison
+    _, base_dt, _ = _run_continuous(_sp_engine(False), sp_reqs)
+    _, sh_dt, _ = _run_continuous(_sp_engine(True), sp_reqs)
+    identical = all(np.array_equal(base_res[i], sh_res[i])
+                    for i in range(n_sp))
+    saved = base_stats.prefill_tokens - sh_stats.prefill_tokens
+    expected_saved = (n_sp - sp_batch) * prefix_len
+    yield {
+        "mode": "shared-prefix", "requests": n_sp, "batch": sp_batch,
+        "kv_block_size": sp_bs, "prefix_len": prefix_len,
+        "prefill_tokens_unshared": base_stats.prefill_tokens,
+        "prefill_tokens_shared": sh_stats.prefill_tokens,
+        "prefill_tokens_saved": saved,
+        "expected_saved": expected_saved,
+        "shared_tok_s_ratio": round(base_dt / sh_dt, 2),
+        "exact_match": identical and saved == expected_saved
+        and sh_stats.shared_tokens == expected_saved,
     }
 
     # -- throughput: fixed-batch vs continuous, half stopping at 25% --

@@ -1,0 +1,65 @@
+"""Shared launcher flag surface.
+
+``launch/serve.py`` and ``launch/dryrun.py`` expose the same quantized-GEMM
+execution knobs (backend choice, shard layout, fused-vs-jnp activation
+prologue, MoE capacity factor); this module owns that block once so the
+two parsers cannot drift.  Callers pick the flag spelling and default
+(serve keeps ``--xnor-backend``/``--backend`` defaulting to ``vpu``,
+dryrun keeps ``--gemm-backend`` defaulting to the in-graph ``xla``
+lowering) — the parsed value always lands on ``args.gemm_backend``.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.kernels.dispatch import GemmConfig
+
+GEMM_BACKENDS = [
+    "xla", "vpu", "mxu",
+    "vpu-k2", "vpu-k4", "vpu-k8",
+    "shard-vpu", "shard-mxu",
+    "shard-vpu-k2", "shard-vpu-k4", "shard-vpu-k8",
+]
+
+
+def add_gemm_flags(ap: argparse.ArgumentParser, *names: str,
+                   default: str = "xla", shard: bool = False,
+                   help: str | None = None) -> None:
+    """The backend/layout flag block.  ``names`` are the flag spellings
+    (first is canonical, the rest aliases); ``shard=True`` adds the
+    tensor-parallel ``--shard`` / ``--shard-layout`` knobs (dryrun sizes
+    its mesh itself, so it leaves them off)."""
+    ap.add_argument(*names, dest="gemm_backend", default=default,
+                    choices=GEMM_BACKENDS,
+                    help=help or (
+                        "base GEMM backend; k-bit layers resolve base "
+                        "names onto the vpu-k* plane kernels, and the "
+                        "shard-* family runs the same kernels tensor-"
+                        "parallel"))
+    if shard:
+        ap.add_argument("--shard", type=int, default=0,
+                        help="tensor-parallel ways for shard-* backends "
+                             "(1-D 'model' mesh; 0 = all local devices)")
+        ap.add_argument("--shard-layout", default="k", choices=["k", "n"],
+                        help="shard-* operand layout: 'k' partitions the "
+                             "packed contraction (Kw-partial popcount + "
+                             "psum; activations quantize+pack INSIDE the "
+                             "shard_map body), 'n' partitions weight "
+                             "output rows (acts pack once and broadcast)")
+    ap.add_argument("--jnp-prologue", action="store_true",
+                    help="use the jnp reference quantize->pack path "
+                         "instead of the fused Pallas prologue kernels "
+                         "(the equivalence oracle; slower)")
+    ap.add_argument("--capacity-factor", type=float, default=None,
+                    help="MoE expert-capacity factor over the balanced "
+                         "share for the EP path (default 2.0); overflow "
+                         "rows drop and are never quantized or packed")
+
+
+def gemm_config_from_args(args: argparse.Namespace) -> GemmConfig:
+    """A GemmConfig from the flags :func:`add_gemm_flags` installed."""
+    return GemmConfig(backend=args.gemm_backend,
+                      shard_layout=getattr(args, "shard_layout", "k"),
+                      fused_prologue=not args.jnp_prologue,
+                      capacity_factor=args.capacity_factor)

@@ -395,21 +395,13 @@ def main() -> None:
                     help="fp | binary[_scaled] | wXaY (e.g. w4a4), with "
                          "optional _packed suffix for the packed serving "
                          "layout (e.g. binary_packed, w4a4_packed)")
-    ap.add_argument("--gemm-backend", default="xla",
-                    choices=["xla", "vpu", "mxu",
-                             "vpu-k2", "vpu-k4", "vpu-k8",
-                             "shard-vpu", "shard-mxu",
-                             "shard-vpu-k2", "shard-vpu-k4",
-                             "shard-vpu-k8"],
-                    help="dispatch backend the cell lowers (default the "
-                         "in-graph xla dequant path; shard-* lowers the "
-                         "tensor-parallel packed GEMM on the cell's mesh)")
-    ap.add_argument("--jnp-prologue", action="store_true",
-                    help="lower the jnp reference quantize->pack path "
-                         "instead of the fused Pallas prologue")
-    ap.add_argument("--capacity-factor", type=float, default=None,
-                    help="MoE expert-capacity factor for the EP path "
-                         "(bounded-memory packed prefill; default 2.0)")
+    from repro.launch import cli
+
+    cli.add_gemm_flags(ap, "--gemm-backend", default="xla",
+                       help="dispatch backend the cell lowers (default "
+                            "the in-graph xla dequant path; shard-* "
+                            "lowers the tensor-parallel packed GEMM on "
+                            "the cell's mesh)")
     ap.add_argument("--seq-parallel", action="store_true",
                     help="Megatron-SP residual sharding (train cells)")
     ap.add_argument("--microbatch", type=int, default=None,

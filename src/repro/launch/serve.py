@@ -9,6 +9,13 @@ queue of mixed-prompt-length requests — twice as many as there are slots
 eos (``--eos-id``) and the drained-loop early exit, and prints per-step /
 TTFT stats.
 
+``--kv-block-size N`` swaps the per-slot contiguous KV slabs for the
+block-table paged pool (greedy tokens stay bit-identical); add
+``--prefill-chunk`` to interleave long-prompt prefill with decode steps
+and ``--shared-prefix`` to refcount-share already-prefilled prompt-prefix
+blocks across requests (the request-stream demo prepends a common
+"system prompt" and reports the prefill tokens saved).
+
 Example:
   PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b --smoke \
       --steps 50 --quant binary --export-packed /tmp/g.packed.npz
@@ -36,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import converter
-from repro.kernels.dispatch import GemmConfig
+from repro.launch import cli
 from repro.launch.train import parse_quant
 from repro.models import lm as lm_model
 from repro.models import registry
@@ -60,33 +67,12 @@ def main() -> None:
     ap.add_argument("--quant", default="fp")
     ap.add_argument("--packed", default=None,
                     help="packed checkpoint from --export-packed")
-    ap.add_argument("--xnor-backend", "--backend", default="vpu",
-                    choices=["vpu", "mxu", "xla",
-                             "vpu-k2", "vpu-k4", "vpu-k8",
-                             "shard-vpu", "shard-mxu",
-                             "shard-vpu-k2", "shard-vpu-k4",
-                             "shard-vpu-k8"],
-                    help="base GEMM backend; k-bit layers resolve base "
-                         "names onto the vpu-k* plane kernels, and the "
-                         "shard-* family runs the same kernels tensor-"
-                         "parallel across --shard devices")
-    ap.add_argument("--shard", type=int, default=0,
-                    help="tensor-parallel ways for shard-* backends "
-                         "(1-D 'model' mesh; 0 = all local devices)")
-    ap.add_argument("--shard-layout", default="k", choices=["k", "n"],
-                    help="shard-* operand layout: 'k' partitions the "
-                         "packed contraction (Kw-partial popcount + "
-                         "psum; activations quantize+pack INSIDE the "
-                         "shard_map body), 'n' partitions weight output "
-                         "rows (acts pack once and broadcast)")
-    ap.add_argument("--jnp-prologue", action="store_true",
-                    help="use the jnp reference quantize->pack path "
-                         "instead of the fused Pallas prologue kernels "
-                         "(the equivalence oracle; slower)")
-    ap.add_argument("--capacity-factor", type=float, default=None,
-                    help="MoE expert-capacity factor over the balanced "
-                         "share for the EP path (default 2.0); overflow "
-                         "rows drop and are never quantized or packed")
+    cli.add_gemm_flags(ap, "--xnor-backend", "--backend", default="vpu",
+                       shard=True,
+                       help="base GEMM backend; k-bit layers resolve base "
+                            "names onto the vpu-k* plane kernels, and the "
+                            "shard-* family runs the same kernels tensor-"
+                            "parallel across --shard devices")
     ap.add_argument("--prompts", type=int, default=4,
                     help="batch width == scheduler KV-cache slots")
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -100,6 +86,21 @@ def main() -> None:
     ap.add_argument("--eos-id", type=int, default=None,
                     help="stop token: the scheduler retires (and recycles)"
                          " a slot the step it emits this id")
+    ap.add_argument("--kv-block-size", type=int, default=None,
+                    help="switch the KV cache to the block-table paged "
+                         "pool with this block size (lm, pure-attn archs; "
+                         "must divide --cache-len); default contiguous "
+                         "per-slot slabs")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="paged mode: split prompt prefill into windows "
+                         "of this many tokens interleaved with decode "
+                         "steps (bounds batchmates' inter-token latency)")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="paged mode: hash full prompt blocks at "
+                         "admission and reuse already-prefilled blocks "
+                         "across identical-prefix requests (the request-"
+                         "stream demo gives every prompt a common prefix "
+                         "so the savings show up in the stats line)")
     ap.add_argument("--request-stream", action="store_true",
                     help="continuous-batching demo mode: submit 2x "
                          "--prompts requests with mixed prompt lengths to "
@@ -111,16 +112,13 @@ def main() -> None:
     cfg = spec.smoke if args.smoke else spec.config
     policy = parse_quant(args.quant)
     mesh = None
-    if args.xnor_backend.startswith("shard-"):
+    if args.gemm_backend.startswith("shard-"):
         ways = args.shard or len(jax.devices())
         mesh = jax.make_mesh((ways,), ("model",))
         print(f"tensor-parallel packed GEMM: {ways}-way "
               f"(layout {args.shard_layout!r})")
     ctx = QCtx(policy=policy, compute_dtype=jnp.float32, mesh=mesh,
-               gemm_config=GemmConfig(backend=args.xnor_backend,
-                                      shard_layout=args.shard_layout,
-                                      fused_prologue=not args.jnp_prologue,
-                                      capacity_factor=args.capacity_factor))
+               gemm_config=cli.gemm_config_from_args(args))
 
     key = jax.random.PRNGKey(args.seed)
     if spec.family == "lm":
@@ -137,7 +135,10 @@ def main() -> None:
     ecfg = EngineConfig(batch=args.prompts, cache_len=args.cache_len,
                         max_new_tokens=args.new_tokens,
                         temperature=args.temperature, eos_id=args.eos_id,
-                        seed=args.seed)
+                        seed=args.seed,
+                        kv_block_size=args.kv_block_size,
+                        prefill_chunk=args.prefill_chunk,
+                        shared_prefix=args.shared_prefix)
     eng = Engine(spec, cfg, ctx, params, ecfg)
 
     rng = np.random.default_rng(args.seed)
@@ -156,10 +157,18 @@ def main() -> None:
         n = 2 * args.prompts  # queue depth > slots -> recycling
         lens = [max(2, args.prompt_len - 2 * (i % 4)) for i in range(n)]
         kw = req_kwargs(n)
+        shared = None
+        if args.shared_prefix:
+            # every request opens with the same "system prompt" so later
+            # admissions reuse its already-prefilled blocks
+            shared = rng.integers(0, cfg.vocab_size,
+                                  (args.prompt_len,)).astype(np.int32)
         sched = Scheduler(eng)
         for i, length in enumerate(lens):
             prompt = rng.integers(0, cfg.vocab_size, (length,)).astype(
                 np.int32)
+            if shared is not None:
+                prompt = np.concatenate([shared, prompt])
             sched.submit(Request(
                 prompt=prompt,
                 prefill_kwargs={k: v[i] for k, v in kw.items()}))
@@ -174,6 +183,10 @@ def main() -> None:
               f"{n_tok} tokens ({n_tok / dt:.1f} tok/s), "
               f"{stats.steps} decode steps, {stats.prefills} prefills, "
               f"mean TTFT {ttft:.1f}ms")
+        if eng.paged:
+            print(f"paged KV: {stats.prefill_tokens} prompt tokens "
+                  f"prefilled, {stats.shared_tokens} reused from shared "
+                  f"prefix blocks")
         for rid in sorted(results)[:4]:
             print(f"  rid={rid} ({len(results[rid])} tok): "
                   f"{results[rid][:10]}")

@@ -318,15 +318,21 @@ def forward(
 
 
 def init_cache(
-    cfg: LMConfig, b: int, cache_len: int, dtype=jnp.bfloat16
+    cfg: LMConfig, b: int, cache_len: int, dtype=jnp.bfloat16,
+    kv: attn_lib.KVCache | None = None,
 ) -> Params:
+    """``kv`` selects the attention cache layout (default contiguous).
+    The paged layout supports pure-attention stacks only — ring (local)
+    and recurrent layers keep slot-private state that block paging has no
+    story for (serve/engine validates before choosing paged)."""
+    kv = attn_lib.CONTIGUOUS if kv is None else kv
     layers = []
     for i in range(cfg.n_layers):
         kind = cfg.mixer_kind(i)
         if kind == "attn":
-            c = attn_lib.cache_init(b, cfg.attn, cache_len, dtype)
+            c = kv.init(b, cfg.attn, cache_len, dtype)
         elif kind == "local_attn":
-            c = attn_lib.cache_init(
+            c = attn_lib.CONTIGUOUS.init(
                 b, cfg.local_attn, min(cfg.local_attn.window, cache_len), dtype
             )
         elif kind == "rglru":
@@ -347,39 +353,55 @@ def init_cache(
     return {"layers": layers}
 
 
-def cache_insert(cache: Params, sub: Params, slots: jax.Array) -> Params:
+def cache_insert(cache: Params, sub: Params, slots: jax.Array,
+                 kv: attn_lib.KVCache | None = None) -> Params:
     """Slot-targeted cache insertion for the continuous-batching scheduler:
-    write a (G,)-batch prefill cache into G slots of the serving batch
-    cache.  ``slots``: (G,) int32 slot indices (traced-safe).
+    write a (G,)-batch CONTIGUOUS prefill cache into G slots of the
+    serving batch cache.  ``slots``: (G,) int32 slot indices (traced-safe).
 
-    Every cache leaf is batch-leading (attention k/v/slot_pos, rglru
-    h/conv, rwkv S/shift, cm_shift), so one row insertion per leaf covers
-    them all.  The inserted ``slot_pos`` rows carry -1 beyond the prompt
-    (init_cache default), which is what retires the previous occupant's
-    stale rows — ``nn/attention._mask`` masks ``pos < 0``."""
-    return jax.tree.map(
-        lambda big, small: attn_lib.insert_rows(big, small, slots),
-        cache, sub,
-    )
+    Contiguous layout: every cache leaf is batch-leading (attention
+    k/v/slot_pos, rglru h/conv, rwkv S/shift, cm_shift), so one row
+    insertion per leaf covers them all.  The inserted ``slot_pos`` rows
+    carry -1 beyond the prompt (init_cache default), which is what retires
+    the previous occupant's stale rows — ``nn/attention._mask`` masks
+    ``pos < 0``.  Paged layout: the sub-cache's valid rows scatter into
+    the slots' mapped blocks (``PagedKVCache.insert``); the allocator's
+    pos-reset of freshly mapped blocks replaces the full-slot-overwrite
+    invariant."""
+    kv = attn_lib.CONTIGUOUS if kv is None else kv
+    if isinstance(kv, attn_lib.ContiguousKVCache):
+        return jax.tree.map(
+            lambda big, small: attn_lib.insert_rows(big, small, slots),
+            cache, sub,
+        )
+    return {"layers": [kv.insert(lc, sub_lc, slots)
+                       for lc, sub_lc in zip(cache["layers"], sub["layers"])]}
 
 
-def cache_reset(cfg: LMConfig, cache: Params, slot: jax.Array) -> Params:
+def cache_reset(cfg: LMConfig, cache: Params, slot: jax.Array,
+                kv: attn_lib.KVCache | None = None) -> Params:
     """Retire one serving slot: attention rows become invisible
-    (``slot_pos = -1`` via ``attn_lib.cache_reset``) and recurrent state
-    rows are zeroed.
+    (``slot_pos = -1`` / table row unmapped, via ``kv.reset``) and
+    recurrent state rows are zeroed.
 
-    NOTE this is hygiene, not the safety mechanism: the shape-static
-    decode step keeps writing the retired slot's junk k/v each step, and
-    ``cache_fill`` stores those with VISIBLE positions (>= 0).  What
-    actually protects the next occupant is :func:`cache_insert`
+    Contiguous layout: this is hygiene, not the safety mechanism — the
+    shape-static decode step keeps writing the retired slot's junk k/v
+    each step, and ``fill`` stores those with VISIBLE positions (>= 0).
+    What actually protects the next occupant is :func:`cache_insert`
     overwriting the ENTIRE slot (all rows, recurrent state included) at
-    admission — do not weaken that to a partial insert."""
+    admission — do not weaken that to a partial insert.  Paged layout:
+    junk writes would land in POOL blocks that may already belong to
+    another slot, so the scheduler additionally write-masks retired rows
+    (``decode_step(..., write_mask=active)``)."""
+    kv = attn_lib.CONTIGUOUS if kv is None else kv
     layers = []
     for i, lc in enumerate(cache["layers"]):
         lc = dict(lc)
         kind = cfg.mixer_kind(i)
-        if kind in ("attn", "local_attn"):
-            lc.update(attn_lib.cache_reset(lc, slot))
+        if kind == "attn":
+            lc.update(kv.reset(lc, slot))
+        elif kind == "local_attn":
+            lc.update(attn_lib.CONTIGUOUS.reset(lc, slot))
         elif kind == "rglru":
             lc["h"] = attn_lib.zero_rows(lc["h"], slot)
             lc["conv"] = attn_lib.zero_rows(lc["conv"], slot)
@@ -399,8 +421,14 @@ def decode_step(
     cache: Params,
     tokens: jax.Array,  # (B, 1)
     pos: jax.Array,  # (B,) absolute position of this token
+    kv: attn_lib.KVCache | None = None,
+    write_mask: jax.Array | None = None,
 ) -> tuple[jax.Array, Params]:
-    """One token for every sequence in the batch.  Returns (logits, cache)."""
+    """One token for every sequence in the batch.  Returns (logits, cache).
+
+    ``kv`` selects the attention cache layout; ``write_mask`` (B,) bool
+    drops cache writes for inactive batch rows (required on the paged
+    layout, where recycled blocks make junk writes unsafe)."""
     x = params["embed"]["table"].astype(ctx.compute_dtype)[tokens]
     if cfg.embed_scale:
         x = x * jnp.asarray(cfg.d_model**0.5, ctx.compute_dtype)
@@ -416,7 +444,8 @@ def decode_step(
         if kind in ("attn", "local_attn"):
             acfg = cfg.attn if kind == "attn" else cfg.local_attn
             h, ac = attn_lib.attn_decode(
-                blk["attn"], h, pos, lc, acfg, ctx, f"{path}/attn"
+                blk["attn"], h, pos, lc, acfg, ctx, f"{path}/attn",
+                kv=kv if kind == "attn" else None, write_mask=write_mask,
             )
             lc.update(ac)
         elif kind == "rglru":
@@ -456,6 +485,64 @@ def decode_step(
     return logits, {"layers": new_layers}
 
 
+def decode_window(
+    params: Params,
+    cfg: LMConfig,
+    ctx: QCtx,
+    cache: Params,
+    tokens: jax.Array,  # (B, C)
+    pos_start: jax.Array,  # (B,) absolute position of each row's first token
+    kv: attn_lib.KVCache,
+    write_mask: jax.Array | None = None,
+) -> tuple[jax.Array, Params]:
+    """A C-token window for every batch row against the (paged) cache:
+    the serving primitive behind chunked prefill AND paged decode (C == 1).
+
+    Each row's tokens sit at positions ``pos_start[b] + [0..C)``; their
+    k/v are stored through ``kv.fill`` and attention runs over the full
+    gathered cache, so a chunk attends to everything already cached for
+    its slot (earlier chunks, refcounted shared-prefix blocks) plus
+    itself.  Rows with ``write_mask=False`` (idle or decoding slots while
+    another row prefills) compute junk and write nothing.  Pure-attention
+    stacks only.  Returns LAST-position logits (B, 1, V) — the only ones
+    admission samples from — and the updated cache."""
+    b, c = tokens.shape
+    x = params["embed"]["table"].astype(ctx.compute_dtype)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, ctx.compute_dtype)
+    if cfg.embed_norm:
+        x = norm_apply(cfg.norm, params["embed_ln"], x)
+    positions = pos_start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+
+    new_layers = []
+    for i, blk in enumerate(params["layers"]):
+        path = f"layers/{i}"
+        if cfg.mixer_kind(i) != "attn":
+            raise ValueError(
+                f"decode_window supports pure-attention stacks; layer {i} "
+                f"is {cfg.mixer_kind(i)!r}")
+        lc = dict(cache["layers"][i])
+        h = norm_apply(cfg.norm, blk["pre_norm"], x)
+        h, ac = attn_lib.attn_window(
+            blk["attn"], h, positions, lc, cfg.attn, ctx, f"{path}/attn",
+            kv, write_mask=write_mask,
+        )
+        lc.update(ac)
+        if cfg.post_norm:
+            h = norm_apply(cfg.norm, blk["post_mixer_norm"], h)
+        x = x + h
+
+        h = norm_apply(cfg.norm, blk["pre_ffn_norm"], x)
+        h, _ = _ffn_forward(blk, i, h, cfg, ctx, path)
+        if cfg.post_norm:
+            h = norm_apply(cfg.norm, blk["post_ffn_norm"], h)
+        x = x + h
+        new_layers.append(lc)
+
+    logits = _logits(params, cfg, ctx, x[:, -1:, :])
+    return logits, {"layers": new_layers}
+
+
 def prefill(
     params: Params,
     cfg: LMConfig,
@@ -485,7 +572,8 @@ def prefill(
             q, k, v = attn_lib._project_qkv(
                 blk["attn"], h, positions, acfg, ctx, f"{path}/attn"
             )
-            cache["layers"][i] = {**lc, **attn_lib.cache_fill(lc, k, v, positions)}
+            cache["layers"][i] = {
+                **lc, **attn_lib.CONTIGUOUS.fill(lc, k, v, positions)}
             qg = q.reshape(b, s, acfg.n_kv_heads, acfg.groups, acfg.d_head)
             if s <= acfg.full_attn_max_seq:
                 out = attn_lib._sdpa(acfg, qg, k, v,

@@ -141,34 +141,45 @@ def forward(
 # --------------------------------------------------------------------------
 
 
-def init_cache(cfg: WhisperConfig, b: int, cache_len: int, dtype=jnp.bfloat16):
+def init_cache(cfg: WhisperConfig, b: int, cache_len: int, dtype=jnp.bfloat16,
+               kv: attn_lib.KVCache | None = None):
+    """Whisper serves on the contiguous layout only: the static per-slot
+    cross-attention cache (t_enc rows, written once at prefill) has no
+    useful block-paging story — serve/engine validates before choosing
+    paged."""
+    if kv is not None and not isinstance(kv, attn_lib.ContiguousKVCache):
+        raise ValueError("whisper serving supports the contiguous KV cache "
+                         "layout only (static cross-attention cache)")
     layers = []
     for _ in range(cfg.n_layers):
         layers.append({
-            "self": attn_lib.cache_init(b, cfg.self_attn, cache_len, dtype),
-            "cross": attn_lib.cache_init(b, cfg.cross_attn, cfg.t_enc, dtype),
+            "self": attn_lib.CONTIGUOUS.init(b, cfg.self_attn, cache_len,
+                                             dtype),
+            "cross": attn_lib.CONTIGUOUS.init(b, cfg.cross_attn, cfg.t_enc,
+                                              dtype),
         })
     return {"layers": layers}
 
 
-def cache_insert(cache, sub, slots: jax.Array):
+def cache_insert(cache, sub, slots: jax.Array,
+                 kv: attn_lib.KVCache | None = None):
     """Slot-targeted cache insertion (see models/lm.cache_insert): write a
     (G,)-batch prefill cache — decoder self-cache AND the static
     cross-attention cache — into G slots of the serving batch cache."""
-    return jax.tree.map(
-        lambda big, small: attn_lib.insert_rows(big, small, slots),
-        cache, sub,
-    )
+    kv = attn_lib.CONTIGUOUS if kv is None else kv
+    return kv.insert(cache, sub, slots)
 
 
-def cache_reset(cfg: WhisperConfig, cache, slot: jax.Array):
+def cache_reset(cfg: WhisperConfig, cache, slot: jax.Array,
+                kv: attn_lib.KVCache | None = None):
     """Retire one serving slot: mark the slot's self- and cross-cache rows
     empty (slot_pos = -1) so attention masks them until readmission."""
+    kv = attn_lib.CONTIGUOUS if kv is None else kv
     layers = []
     for lc in cache["layers"]:
         layers.append({
-            "self": attn_lib.cache_reset(lc["self"], slot),
-            "cross": attn_lib.cache_reset(lc["cross"], slot),
+            "self": kv.reset(lc["self"], slot),
+            "cross": kv.reset(lc["cross"], slot),
         })
     return {"layers": layers}
 
@@ -191,7 +202,7 @@ def prefill(params, cfg: WhisperConfig, ctx: QCtx, frames, tokens, cache_len):
         h = norm_apply("layernorm", blk["ln1"], x)
         q, k, v = attn_lib._project_qkv(blk["attn"], h, positions,
                                         cfg.self_attn, ctx, f"{path}/attn")
-        lc["self"] = attn_lib.cache_fill(lc["self"], k, v, positions)
+        lc["self"] = attn_lib.CONTIGUOUS.fill(lc["self"], k, v, positions)
         qg = q.reshape(b, s, cfg.n_heads, 1, cfg.self_attn.d_head)
         if s <= cfg.self_attn.full_attn_max_seq:
             out = attn_lib._sdpa(cfg.self_attn, qg, k, v,
@@ -205,7 +216,7 @@ def prefill(params, cfg: WhisperConfig, ctx: QCtx, frames, tokens, cache_len):
         h = norm_apply("layernorm", blk["ln_x"], x)
         kx, vx = attn_lib.cross_kv(blk["xattn"], enc, cfg.cross_attn, ctx,
                                    f"{path}/xattn")
-        lc["cross"] = attn_lib.cache_fill(lc["cross"], kx, vx, enc_pos)
+        lc["cross"] = attn_lib.CONTIGUOUS.fill(lc["cross"], kx, vx, enc_pos)
         x = x + attn_lib.attn_forward(blk["xattn"], h, positions,
                                       cfg.cross_attn, ctx, f"{path}/xattn",
                                       kv=(kx, vx), kv_positions=enc_pos)

@@ -209,26 +209,15 @@ def cross_kv(
 
 
 # --------------------------------------------------------------------------
-# KV cache (decode)
+# KV cache (decode) — one KVCache API, two layouts
 # --------------------------------------------------------------------------
-
-
-def cache_init(
-    b: int, cfg: AttnConfig, cache_len: int, dtype=jnp.bfloat16
-) -> Params:
-    """Empty cache.  Local layers pass cache_len == cfg.window (ring)."""
-    return {
-        "k": jnp.zeros((b, cache_len, cfg.n_kv_heads, cfg.d_head), dtype),
-        "v": jnp.zeros((b, cache_len, cfg.n_kv_heads, cfg.d_head), dtype),
-        "slot_pos": jnp.full((b, cache_len), -1, jnp.int32),
-    }
 
 
 def insert_rows(big: jax.Array, small: jax.Array, slots: jax.Array) -> jax.Array:
     """Write the G leading rows of ``small`` into batch rows ``slots`` of
     ``big`` (both batch-leading; ``slots``: (G,) int32, traced-safe).  The
     per-slot building block of the continuous-batching scheduler's cache
-    insertion (models/{lm,whisper}.cache_insert tree-map this over every
+    insertion (``ContiguousKVCache.insert`` tree-maps this over every
     cache leaf)."""
     for g in range(small.shape[0]):
         big = jax.lax.dynamic_update_slice_in_dim(
@@ -244,68 +233,281 @@ def zero_rows(x: jax.Array, slot: jax.Array) -> jax.Array:
     )
 
 
-def cache_reset(cache: Params, slot: jax.Array) -> Params:
-    """Retire one batch slot of an attention cache: mark every row of that
-    slot empty (``slot_pos = -1``) so :func:`_mask` hides it from future
-    queries.  K/V bytes are left in place — the next occupant's prefill
-    insertion overwrites the whole slot (and carries its own -1 rows past
-    the prompt), so stale keys can never become visible again."""
-    cache_len = cache["slot_pos"].shape[1]
-    slot_pos = jax.lax.dynamic_update_slice(
-        cache["slot_pos"], jnp.full((1, cache_len), -1, jnp.int32), (slot, 0)
-    )
-    return {**cache, "slot_pos": slot_pos}
+@dataclasses.dataclass(frozen=True)
+class KVCache:
+    """Layout handle for attention KV caches.
+
+    A KVCache instance is a STATIC descriptor (hashable, jit-closure-safe);
+    the cache state itself is a plain dict pytree that flows through the
+    jitted serving functions.  Both layouts implement the same surface, so
+    model code never branches on which layout is live:
+
+    * ``init(b, cfg, cache_len, dtype)``  -> empty cache pytree
+    * ``insert(cache, sub, slots)``       -> write a (G,)-batch prefill
+      sub-cache into G batch slots (admission)
+    * ``reset(cache, slot)``              -> retire one slot (rows become
+      invisible to :func:`_mask`)
+    * ``fill(cache, k, v, positions, write_mask=None)`` -> store projected
+      k/v at absolute positions
+    * ``gather(cache)``                   -> ``(k, v, pos)`` dense views
+      ``(B, L, KVH, Dh) x2 + (B, L)`` that attention consumes
+
+    Layouts: :class:`ContiguousKVCache` (per-slot (B, L, H, Dh) storage —
+    the PR 5 scheduler layout) and :class:`PagedKVCache` (shared block
+    pool + per-slot int32 block tables — block-granular allocation and
+    refcounted prefix sharing; see serve/engine.py)."""
+
+    def init(self, b: int, cfg: AttnConfig, cache_len: int,
+             dtype=jnp.bfloat16) -> Params:
+        raise NotImplementedError
+
+    def insert(self, cache: Params, sub: Params, slots: jax.Array) -> Params:
+        raise NotImplementedError
+
+    def reset(self, cache: Params, slot: jax.Array) -> Params:
+        raise NotImplementedError
+
+    def fill(self, cache: Params, k, v, positions,
+             write_mask: jax.Array | None = None) -> Params:
+        raise NotImplementedError
+
+    def gather(self, cache: Params):
+        raise NotImplementedError
 
 
-def cache_fill(cache: Params, k, v, positions) -> Params:
-    """Write to the cache.  k/v: (B, S, KVH, Dh), positions: (B, S).
-    Slots are ``pos % cache_len`` (ring for local layers; identity when
-    cache_len >= S).
+@dataclasses.dataclass(frozen=True)
+class ContiguousKVCache(KVCache):
+    """Per-slot contiguous storage: ``k``/``v`` (B, cache_len, KVH, Dh) +
+    ``slot_pos`` (B, cache_len).  ``gather`` is free (returns the arrays).
+    Local (sliding-window) layers use cache_len == window as a ring."""
 
-    No scatters: scatter onto a model-sharded cache triggers GSPMD
-    "involuntary full rematerialization" (the cache gets replicated —
-    measured 0.86 s/step of collectives on granite decode_32k).  Instead:
+    def init(self, b, cfg: AttnConfig, cache_len, dtype=jnp.bfloat16):
+        return {
+            "k": jnp.zeros((b, cache_len, cfg.n_kv_heads, cfg.d_head), dtype),
+            "v": jnp.zeros((b, cache_len, cfg.n_kv_heads, cfg.d_head), dtype),
+            "slot_pos": jnp.full((b, cache_len), -1, jnp.int32),
+        }
 
-    * S == 1 (decode, per-batch positions): one-hot select write —
-      elementwise, any sharding, SPMD-safe.
-    * S > 1 (prefill): positions are the standard arange; the write is a
-      dynamic-update-slice (cache_len >= S) or a roll of the last
-      cache_len tokens (ring wrap), both SPMD-friendly.
+    def insert(self, cache, sub, slots):
+        """Batch-row insertion per leaf.  Works on ANY batch-leading cache
+        pytree (models tree-map it over attention + recurrent leaves).
+        The inserted ``slot_pos`` rows carry -1 beyond the prompt, which
+        retires the previous occupant's stale rows."""
+        return jax.tree.map(
+            lambda big, small: insert_rows(big, small, slots), cache, sub
+        )
+
+    def reset(self, cache, slot):
+        """Retire one batch slot: mark every row of that slot empty
+        (``slot_pos = -1``) so :func:`_mask` hides it from future queries.
+        K/V bytes are left in place — the next occupant's prefill insertion
+        overwrites the whole slot (and carries its own -1 rows past the
+        prompt), so stale keys can never become visible again."""
+        cache_len = cache["slot_pos"].shape[1]
+        slot_pos = jax.lax.dynamic_update_slice(
+            cache["slot_pos"], jnp.full((1, cache_len), -1, jnp.int32),
+            (slot, 0)
+        )
+        return {**cache, "slot_pos": slot_pos}
+
+    def fill(self, cache, k, v, positions, write_mask=None):
+        """Write to the cache.  k/v: (B, S, KVH, Dh), positions: (B, S).
+        Slots are ``pos % cache_len`` (ring for local layers; identity when
+        cache_len >= S).  ``write_mask`` is ignored: storage is slot-
+        private, so a junk write from a retired/prefilling batch row can
+        never leak into another request (admission's full-slot ``insert``
+        overwrite is the safety mechanism).
+
+        No scatters: scatter onto a model-sharded cache triggers GSPMD
+        "involuntary full rematerialization" (the cache gets replicated —
+        measured 0.86 s/step of collectives on granite decode_32k).
+        Instead:
+
+        * S == 1 (decode, per-batch positions): one-hot select write —
+          elementwise, any sharding, SPMD-safe.
+        * S > 1 (prefill): positions are the standard arange; the write is
+          a dynamic-update-slice (cache_len >= S) or a roll of the last
+          cache_len tokens (ring wrap), both SPMD-friendly.
+        """
+        cache_len = cache["k"].shape[1]
+        s = k.shape[1]
+        if s == 1:
+            slots = positions % cache_len  # (B, 1)
+            mask = jnp.arange(cache_len)[None, :] == slots  # (B, L)
+            m4 = mask[:, :, None, None]
+            return {
+                "k": jnp.where(m4, k.astype(cache["k"].dtype), cache["k"]),
+                "v": jnp.where(m4, v.astype(cache["v"].dtype), cache["v"]),
+                "slot_pos": jnp.where(mask, positions, cache["slot_pos"]),
+            }
+
+        if s <= cache_len:
+            zero = (0, 0, 0, 0)
+            return {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), zero),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), zero),
+                "slot_pos": jax.lax.dynamic_update_slice(
+                    cache["slot_pos"], positions, (0, 0)),
+            }
+
+        # ring wrap: keep the last cache_len tokens; token at position p
+        # lands in slot p % cache_len, i.e. a cyclic roll by
+        # (s - cache_len) % L.
+        shift = (s - cache_len) % cache_len
+        k_t = jnp.roll(k[:, s - cache_len:], shift, axis=1)
+        v_t = jnp.roll(v[:, s - cache_len:], shift, axis=1)
+        p_t = jnp.roll(positions[:, s - cache_len:], shift, axis=1)
+        return {
+            "k": k_t.astype(cache["k"].dtype),
+            "v": v_t.astype(cache["v"].dtype),
+            "slot_pos": p_t,
+        }
+
+    def gather(self, cache):
+        return cache["k"], cache["v"], cache["slot_pos"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVCache(KVCache):
+    """Block-table paged storage over a shared pool.
+
+    Leaves: ``pool_k``/``pool_v`` (num_blocks, block_size, KVH, Dh),
+    ``pool_pos`` (num_blocks, block_size) int32 absolute token positions
+    (-1 = empty), ``table`` (B, blocks_per_slot) int32 block ids (-1 =
+    unmapped — the whole slot is invisible).  Token at slot-local position
+    ``p`` lives in block ``table[b, p // block_size]`` at offset
+    ``p % block_size``, so ``gather`` reassembles each slot's tokens in
+    position order — the dense view is VALUE-identical to the contiguous
+    layout's storage, which is what makes paged serving bit-identical.
+
+    The block table is part of the cache pytree: the host-side allocator
+    (serve/engine.BlockAllocator) rewrites table rows and resets freshly
+    allocated blocks' ``pool_pos`` at admission; the jitted fill/gather
+    below only ever follow the table.  Invariants the allocator maintains:
+
+    * a block is referenced by at most one WRITABLE slot position range;
+      refcount > 1 blocks (shared prompt prefixes) are never written —
+      chunked prefill starts at the first novel token and decode writes at
+      pos >= prompt_len, both past any shared full block;
+    * freshly allocated blocks get ``pool_pos = -1`` before the table row
+      lands, so a previous occupant's stale keys are invisible;
+    * retired slots keep decoding junk in the shape-static step — their
+      writes MUST be dropped (``write_mask``), because their freed blocks
+      may already belong to another slot.
     """
-    cache_len = cache["k"].shape[1]
-    s = k.shape[1]
-    if s == 1:
-        slots = positions % cache_len  # (B, 1)
-        mask = jnp.arange(cache_len)[None, :] == slots  # (B, L)
-        m4 = mask[:, :, None, None]
+
+    block_size: int = 16
+
+    def _flat(self, cache, positions, write_mask):
+        """(B, S) flattened pool indices; invalid/masked writes -> index
+        num_blocks*block_size, dropped by scatter mode='drop'."""
+        bs = self.block_size
+        table = cache["table"]
+        bps = table.shape[1]
+        nb = cache["pool_pos"].shape[0]
+        blk_idx = jnp.clip(positions // bs, 0, bps - 1)  # (B, S)
+        blk = jnp.take_along_axis(table, blk_idx, axis=1)  # (B, S)
+        valid = (positions >= 0) & (positions < bps * bs) & (blk >= 0)
+        if write_mask is not None:
+            valid &= write_mask[:, None]
+        flat = jnp.clip(blk, 0) * bs + positions % bs
+        return jnp.where(valid, flat, nb * bs)
+
+    def init(self, b, cfg: AttnConfig, cache_len, dtype=jnp.bfloat16):
+        bs = self.block_size
+        if cache_len % bs:
+            raise ValueError(
+                f"cache_len {cache_len} not a multiple of kv block size {bs}")
+        bps = cache_len // bs
+        nb = b * bps  # the contiguous layout's exact footprint
         return {
-            "k": jnp.where(m4, k.astype(cache["k"].dtype), cache["k"]),
-            "v": jnp.where(m4, v.astype(cache["v"].dtype), cache["v"]),
-            "slot_pos": jnp.where(mask, positions, cache["slot_pos"]),
+            "pool_k": jnp.zeros((nb, bs, cfg.n_kv_heads, cfg.d_head), dtype),
+            "pool_v": jnp.zeros((nb, bs, cfg.n_kv_heads, cfg.d_head), dtype),
+            "pool_pos": jnp.full((nb, bs), -1, jnp.int32),
+            "table": jnp.full((b, bps), -1, jnp.int32),
         }
 
-    if s <= cache_len:
-        zero = (0, 0, 0, 0)
+    def insert(self, cache, sub, slots):
+        """Write a (G, L, ...) CONTIGUOUS prefill sub-cache into the G
+        slots' mapped blocks (positions from ``sub['slot_pos']``; -1 rows
+        are dropped — freshly allocated blocks were already pos-reset by
+        the allocator, which replaces the contiguous layout's full-slot
+        overwrite invariant)."""
+        pos = sub["slot_pos"]  # (G, L)
+        g, length = pos.shape
+        table_rows = cache["table"][slots]  # (G, bps)
+        flat = self._flat({**cache, "table": table_rows}, pos, None)
+        flat = flat.reshape(-1)
+        nb, bs = cache["pool_pos"].shape
+        kd = cache["pool_k"].dtype
         return {
-            "k": jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), zero),
-            "v": jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), zero),
-            "slot_pos": jax.lax.dynamic_update_slice(
-                cache["slot_pos"], positions, (0, 0)),
+            **cache,
+            "pool_k": cache["pool_k"].reshape(nb * bs, *cache["pool_k"].shape[2:])
+            .at[flat].set(sub["k"].astype(kd).reshape(g * length, *sub["k"].shape[2:]),
+                          mode="drop").reshape(cache["pool_k"].shape),
+            "pool_v": cache["pool_v"].reshape(nb * bs, *cache["pool_v"].shape[2:])
+            .at[flat].set(sub["v"].astype(kd).reshape(g * length, *sub["v"].shape[2:]),
+                          mode="drop").reshape(cache["pool_v"].shape),
+            "pool_pos": cache["pool_pos"].reshape(nb * bs)
+            .at[flat].set(pos.reshape(-1), mode="drop")
+            .reshape(cache["pool_pos"].shape),
         }
 
-    # ring wrap: keep the last cache_len tokens; token at position p lands
-    # in slot p % cache_len, i.e. a cyclic roll by (s - cache_len) % L.
-    shift = (s - cache_len) % cache_len
-    k_t = jnp.roll(k[:, s - cache_len:], shift, axis=1)
-    v_t = jnp.roll(v[:, s - cache_len:], shift, axis=1)
-    p_t = jnp.roll(positions[:, s - cache_len:], shift, axis=1)
-    return {
-        "k": k_t.astype(cache["k"].dtype),
-        "v": v_t.astype(cache["v"].dtype),
-        "slot_pos": p_t,
-    }
+    def reset(self, cache, slot):
+        """Retire one slot: unmap its table row (-1) so ``gather`` masks
+        the whole slot.  Block bookkeeping (refcount decrement, free-list
+        return) is the HOST allocator's job — pool bytes are untouched, so
+        a block shared with a live slot keeps serving its holder."""
+        bps = cache["table"].shape[1]
+        table = jax.lax.dynamic_update_slice(
+            cache["table"], jnp.full((1, bps), -1, jnp.int32), (slot, 0)
+        )
+        return {**cache, "table": table}
+
+    def fill(self, cache, k, v, positions, write_mask=None):
+        """Scatter k/v/pos through the block table.  Distinct (row, pos)
+        pairs always hit distinct pool entries (the allocator never maps a
+        writable position range of two slots onto one block), so the
+        scatter is deterministic; ``write_mask=False`` rows (retired or
+        still-prefilling slots decoding junk) are dropped entirely."""
+        b, s = positions.shape
+        flat = self._flat(cache, positions, write_mask).reshape(-1)
+        nb, bs = cache["pool_pos"].shape
+        kd = cache["pool_k"].dtype
+        return {
+            **cache,
+            "pool_k": cache["pool_k"].reshape(nb * bs, *cache["pool_k"].shape[2:])
+            .at[flat].set(k.astype(kd).reshape(b * s, *k.shape[2:]),
+                          mode="drop").reshape(cache["pool_k"].shape),
+            "pool_v": cache["pool_v"].reshape(nb * bs, *cache["pool_v"].shape[2:])
+            .at[flat].set(v.astype(kd).reshape(b * s, *v.shape[2:]),
+                          mode="drop").reshape(cache["pool_v"].shape),
+            "pool_pos": cache["pool_pos"].reshape(nb * bs)
+            .at[flat].set(positions.reshape(-1), mode="drop")
+            .reshape(cache["pool_pos"].shape),
+        }
+
+    def gather(self, cache):
+        """Dense (B, L, KVH, Dh) views via the table — position order, so
+        the result matches the contiguous layout's storage bit-for-bit.
+        Unmapped table entries (-1) read block 0 but report pos -1, which
+        :func:`_mask` hides."""
+        table = cache["table"]  # (B, bps)
+        b, bps = table.shape
+        bs = self.block_size
+        safe = jnp.clip(table, 0)
+        k = cache["pool_k"][safe]  # (B, bps, bs, KVH, Dh)
+        v = cache["pool_v"][safe]
+        pos = jnp.where(table[:, :, None] >= 0, cache["pool_pos"][safe], -1)
+        kvh, dh = k.shape[-2:]
+        return (k.reshape(b, bps * bs, kvh, dh),
+                v.reshape(b, bps * bs, kvh, dh),
+                pos.reshape(b, bps * bs))
+
+
+CONTIGUOUS = ContiguousKVCache()
 
 
 def attn_decode(
@@ -318,11 +520,17 @@ def attn_decode(
     path: str,
     *,
     cross: bool = False,
+    kv: KVCache | None = None,
+    write_mask: jax.Array | None = None,
 ) -> tuple[jax.Array, Params]:
     """One decode step against the cache; returns (out (B,1,D), new cache).
 
     ``cross=True`` reads a static cross-attention cache (no write, no mask
-    beyond slot validity)."""
+    beyond slot validity).  ``kv`` selects the cache layout (default
+    contiguous); ``write_mask`` (B,) drops inactive rows' cache writes on
+    layouts where block recycling makes junk writes unsafe (paged)."""
+    if kv is None:
+        kv = CONTIGUOUS
     b = x.shape[0]
     positions = pos[:, None]
     if cross:
@@ -333,10 +541,41 @@ def attn_decode(
             q = rope(q, positions, cfg.rope_theta)
     else:
         q, k_new, v_new = _project_qkv(params, x, positions, cfg, ctx, path)
-        cache = cache_fill(cache, k_new, v_new, positions)
+        cache = kv.fill(cache, k_new, v_new, positions, write_mask)
 
     qg = q.reshape(b, 1, cfg.n_kv_heads, cfg.groups, cfg.d_head)
-    mask = _mask(cfg, positions, cache["slot_pos"])  # (B, 1, L)
-    out = _sdpa(cfg, qg, cache["k"], cache["v"], mask)
+    k, v, k_pos = kv.gather(cache)
+    mask = _mask(cfg, positions, k_pos)  # (B, 1, L)
+    out = _sdpa(cfg, qg, k, v, mask)
     out = out.reshape(b, 1, cfg.n_heads * cfg.d_head).astype(ctx.compute_dtype)
+    return ctx.dense(params["o"], out, f"{path}/o"), cache
+
+
+def attn_window(
+    params: Params,
+    x: jax.Array,  # (B, C, D)
+    positions: jax.Array,  # (B, C) absolute positions of these tokens
+    cache: Params,
+    cfg: AttnConfig,
+    ctx: QCtx,
+    path: str,
+    kv: KVCache,
+    *,
+    write_mask: jax.Array | None = None,
+) -> tuple[jax.Array, Params]:
+    """A C-token window against the cache: project, store the window's
+    k/v, then attend over the FULL gathered cache (the window included —
+    causality comes from the position mask).  ``attn_decode`` is the C==1
+    special case; chunked prefill is the general one, where each chunk of
+    a long prompt attends to everything already cached (earlier chunks,
+    shared prefix blocks) plus itself, so one jitted shape serves decode,
+    chunked prefill, and shared-prefix suffix prefill."""
+    b, c, _ = x.shape
+    q, k_new, v_new = _project_qkv(params, x, positions, cfg, ctx, path)
+    cache = kv.fill(cache, k_new, v_new, positions, write_mask)
+    qg = q.reshape(b, c, cfg.n_kv_heads, cfg.groups, cfg.d_head)
+    k, v, k_pos = kv.gather(cache)
+    mask = _mask(cfg, positions, k_pos)  # (B, C, L)
+    out = _sdpa(cfg, qg, k, v, mask)
+    out = out.reshape(b, c, cfg.n_heads * cfg.d_head).astype(ctx.compute_dtype)
     return ctx.dense(params["o"], out, f"{path}/o"), cache

@@ -1,8 +1,9 @@
 """Serving engine: continuous-batching scheduler over the packed-GEMM
-decode step.
+decode step, with a contiguous OR block-table paged KV cache.
 
 ``Scheduler`` owns a FIFO request queue and ``EngineConfig.batch`` KV-cache
-slots.  Its loop:
+slots.  The **contiguous** loop (``EngineConfig.kv_block_size=None``, the
+PR 5 baseline — unchanged):
 
 * **admission** — free slots are filled from the queue head: the maximal
   run of queued requests with the same prompt length prefills together
@@ -20,25 +21,62 @@ slots.  Its loop:
 * **retirement** — the step a sequence emits its ``eos_id`` or exhausts
   its per-request ``max_new_tokens``, its slot is reset
   (``cache_reset``: slot rows invisible, recurrent state zeroed) and
-  immediately eligible for the next queued request.  The reset is
-  hygiene only — later decode steps still write the retired slot's junk
-  k/v at visible positions; correctness rests on admission's FULL-slot
-  ``cache_insert`` overwrite.
-* **early exit** — the loop ends the step the queue and the batch are
-  both drained; nobody pays for a fixed-horizon drain.
+  immediately eligible for the next queued request.
 
-Shape-static jit invariants: one prefill compile per distinct
-(group, prompt_len) admission shape, one decode compile total, one cache
-insert compile per group size.  Greedy outputs are bit-identical to
-per-request fixed-batch generation because every per-token op is
-batch-row-independent — the one exception is capacity-bounded MoE
-routing (`GemmConfig.capacity_factor`), where drops depend on batchmates.
+The **paged** loop (``EngineConfig.kv_block_size=bs``) swaps the per-slot
+contiguous slabs for one shared pool of ``batch * cache_len/bs`` blocks
+plus per-slot int32 block tables (``nn/attention.PagedKVCache``) and adds
+prefix sharing and chunked prefill on top.  Block-table / refcount
+invariants (``BlockAllocator`` is the single owner of block lifetime; the
+jitted steps only ever FOLLOW the table):
 
-``Engine.generate`` is a thin compatibility wrapper over
-``Scheduler.run``: rectangular prompts admit as one full-width group and
-decode exactly as the old fixed-batch loop did (same tokens), while
-``EngineConfig.eos_id`` now stops rows early (rows pad with the stop
-token).
+* every block is free, cached (refcount 0, contents retained under its
+  prefix chain-hash, LRU-evictable), or active (refcount >= 1); a block
+  is writable only while exactly ONE slot maps it — shared prefix blocks
+  (refcount > 1, or refcount 1 via a cache hit) are never written, because
+  chunked prefill starts at the first novel token and decode writes at
+  ``pos >= prompt_len``, both strictly past every shared full block
+  (admission caps sharing at ``(prompt_len - 1) // bs`` blocks);
+* freshly allocated blocks get ``pool_pos = -1`` BEFORE their table row
+  lands (``Engine._map_slot``), so a previous occupant's stale keys are
+  invisible — this replaces the contiguous layout's full-slot-overwrite
+  invariant;
+* retired slots still decode junk inside the shape-static step; their
+  junk writes are DROPPED (the ``write_mask`` operand of the paged fill),
+  because a retired slot's released blocks may already belong to another
+  slot — on the contiguous layout junk writes are slot-private and merely
+  invisible, on the paged layout they would be corruption;
+* retirement releases each held block exactly once (``SlotState.blocks``
+  is cleared as it is released); a shared block returns to the free list
+  only when its LAST holder retires, and registered prefix blocks retire
+  into the cached state so a later identical-prefix request (the
+  "prefilled once, served to millions" pattern) skips their prefill
+  entirely — ``SchedulerStats.shared_tokens`` counts the skipped tokens.
+
+**Chunked prefill**: admission is per-request (no same-length grouping);
+each scheduler iteration advances every prefilling slot by one
+``EngineConfig.prefill_chunk``-token window (``models/lm.decode_window``:
+fill-then-gather-then-attend over the full cache, decode is its width-1
+special case) and THEN runs one decode step for the decoding slots, so
+batchmates' inter-token latency is bounded by one chunk instead of one
+whole prompt.  A slot samples its first token from the window whose last
+token is its last prompt token — the same logits position the contiguous
+prefill samples from.
+
+Shape-static jit invariants: contiguous — one prefill compile per
+distinct (group, prompt_len) admission shape, one decode compile total,
+one cache-insert compile per group size; paged — one decode compile, one
+table-remap compile, one window compile per distinct chunk width.  Greedy
+outputs are bit-identical to per-request fixed-batch generation because
+every per-token op is batch-row-independent and the paged gather
+reassembles each slot's tokens in exactly the contiguous position order —
+the one exception is capacity-bounded MoE routing
+(`GemmConfig.capacity_factor`), where drops depend on batchmates.
+
+Sampling is per-row: each request draws from the key stream
+``fold_in(fold_in(PRNGKey(seed), rid), n_emitted)`` (seed/temperature
+resolved request > engine via :class:`SamplingParams`), so a request's
+sampled tokens are invariant to its batchmates and admission order.
 
 Serving a BMXNet-converted checkpoint (packed params) is the paper's
 deployment mode: quantized weights stay bit-packed in HBM — 32x smaller at
@@ -46,18 +84,17 @@ deployment mode: quantized weights stay bit-packed in HBM — 32x smaller at
 quantized GEMM runs through ``kernels/dispatch`` — backend and tile choice
 follow the ``QCtx.gemm_config`` threaded into every layer, and each
 layer's ``QuantSpec`` bit widths pick the xnor or bit-plane kernels — the
-decode memory-roofline win analysed in EXPERIMENTS.md.
+decode memory-roofline win analysed in EXPERIMENTS.md.  The paged pool is
+the serving-state mirror of that weight bit-packing: block-granular
+allocation instead of max-length slabs, one refcounted copy of a shared
+system prompt.
 
 Tensor-parallel serving: configure a ``shard-*`` backend (e.g.
 ``GemmConfig(backend="shard-vpu")``) plus a mesh (``EngineConfig.mesh``,
 ``GemmConfig.mesh``, or ``QCtx.mesh``) and every packed GEMM runs under
 ``shard_map`` with the packed K dimension partitioned across devices —
 bit-identical logits to the single-device engine (the Kw-partial popcount
-psums exactly; see kernels/dispatch.py).  The activation prologue
-(quantize+pack, Fig. 1's "binarize input") is dispatch-owned too: one
-fused Pallas pass per GEMM, running INSIDE the shard_map body on the
-``"k"`` layout — ``GemmConfig.fused_prologue=False`` swaps in the jnp
-reference path for A/B checks.
+psums exactly; see kernels/dispatch.py).
 """
 
 from __future__ import annotations
@@ -75,9 +112,48 @@ from repro.configs.common import ArchSpec
 from repro.kernels.dispatch import GemmConfig
 from repro.models import lm as lm_model
 from repro.models import whisper as whisper_model
+from repro.nn import attention as attn_lib
 from repro.nn.common import QCtx
 
 Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs.  ``None`` = inherit the next level down
+    (request override > request legacy fields > ``EngineConfig.sampling``
+    > EngineConfig legacy fields); :func:`resolve_sampling` produces the
+    fully-concrete record the scheduler runs with."""
+
+    temperature: float | None = None  # 0 = greedy
+    seed: int | None = None  # per-request PRNG stream root
+    eos_id: int | None = None  # stop token (resolved None = budget-only)
+    min_tokens: int | None = None  # suppress eos before this many tokens
+    max_new_tokens: int | None = None  # emission budget
+
+
+def resolve_sampling(req: "Request", ecfg: "EngineConfig") -> SamplingParams:
+    """Concrete sampling parameters for one request (no Nones except a
+    genuinely-unset ``eos_id``)."""
+    base = ecfg.sampling if ecfg.sampling is not None else SamplingParams()
+    sp = req.sampling if req.sampling is not None else SamplingParams()
+
+    def pick(*vals):
+        for v in vals:
+            if v is not None:
+                return v
+        return None
+
+    return SamplingParams(
+        temperature=pick(sp.temperature, base.temperature, ecfg.temperature),
+        seed=pick(sp.seed, base.seed, ecfg.seed),
+        eos_id=pick(sp.eos_id, req.eos_id, base.eos_id, ecfg.eos_id),
+        min_tokens=pick(sp.min_tokens,
+                        req.min_tokens if req.min_tokens else None,
+                        base.min_tokens, 0),
+        max_new_tokens=pick(sp.max_new_tokens, req.max_new_tokens,
+                            base.max_new_tokens, ecfg.max_new_tokens),
+    )
 
 
 @dataclasses.dataclass
@@ -90,9 +166,23 @@ class EngineConfig:
     # this id.  None = budget-only retirement (the legacy fixed-horizon
     # behaviour for Engine.generate).
     eos_id: int | None = None
-    # PRNG seed for sampled decoding (temperature > 0); the key stream
-    # splits before EVERY sample, so no key is ever reused.
+    # PRNG seed root for sampled decoding (temperature > 0); each request
+    # draws from fold_in(fold_in(PRNGKey(seed), rid), n_emitted), so
+    # streams never collide and are scheduling-invariant.
     seed: int = 0
+    # engine-level SamplingParams defaults; individual fields above are
+    # the legacy aliases (sampling wins where set)
+    sampling: SamplingParams | None = None
+    # None = contiguous per-slot KV slabs (the PR 5 layout).  An int
+    # selects the block-table paged pool with this block size — lm family,
+    # pure-"attn" mixer stacks, no vision prefix; cache_len must divide.
+    kv_block_size: int | None = None
+    # max tokens per prefill window in paged mode (None = whole prompt in
+    # one window); smaller chunks bound batchmates' inter-token latency
+    prefill_chunk: int | None = None
+    # paged mode: hash full prompt blocks at admission and reuse
+    # already-prefilled blocks across identical-prefix requests
+    shared_prefix: bool = False
     # per-engine override of how quantized GEMMs execute (backend + tiles
     # + fused_prologue + capacity_factor); None inherits the QCtx's
     # gemm_config.  Tensor-parallel serving picks a `shard-*` backend here
@@ -110,15 +200,16 @@ class Request:
 
     ``prefill_kwargs`` holds per-request prefill operands WITHOUT the batch
     dim (lm VLM: ``vision_embeds`` (P, d_vision); whisper: ``frames``
-    (T_enc, d_model)); admission stacks them per group.  ``max_new_tokens``
-    and ``eos_id`` fall back to the EngineConfig values when None."""
+    (T_enc, d_model)); admission stacks them per group.  ``sampling``
+    overrides the engine-level :class:`SamplingParams` per field;
+    ``max_new_tokens`` / ``eos_id`` / ``min_tokens`` are the legacy
+    aliases (``sampling`` wins where set)."""
 
     prompt: np.ndarray  # (S,) int32
     rid: int | None = None  # assigned by Scheduler.submit when None
+    sampling: SamplingParams | None = None
     max_new_tokens: int | None = None
     eos_id: int | None = None
-    # suppress eos-retirement until this many tokens have been emitted
-    # (the standard `min_tokens` sampling knob)
     min_tokens: int = 0
     prefill_kwargs: dict = dataclasses.field(default_factory=dict)
 
@@ -132,16 +223,101 @@ class SlotState:
     budget: int  # tokens still allowed (including not-yet-emitted)
     eos_id: int | None
     min_tokens: int = 0
+    temperature: float = 0.0
+    seed: int = 0
     tokens: list = dataclasses.field(default_factory=list)
+    # -- paged-mode fields --
+    phase: str = "decode"  # "prefill" until the whole prompt is in-cache
+    prompt: np.ndarray | None = None  # kept for chunked prefill windows
+    prefill_done: int = 0  # prompt tokens already in-cache (incl. shared)
+    n_shared: int = 0  # leading blocks reused from the prefix index
+    blocks: list = dataclasses.field(default_factory=list)  # held block ids
+    block_hashes: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
 class SchedulerStats:
     steps: int = 0  # jitted decode steps executed
-    prefills: int = 0  # jitted prefill (admission) calls
+    prefills: int = 0  # jitted prefill (admission/chunk) calls
+    prefill_tokens: int = 0  # prompt tokens actually prefilled (paged)
+    shared_tokens: int = 0  # prompt tokens skipped via prefix sharing
     admissions: list = dataclasses.field(default_factory=list)  # (rid, slot)
     t_first: dict = dataclasses.field(default_factory=dict)  # rid -> s
     t_done: dict = dataclasses.field(default_factory=dict)  # rid -> s
+
+
+class BlockAllocator:
+    """Host-side owner of paged-pool block lifetime.
+
+    States: **free** (on the free list), **active** (refcount >= 1, held
+    by at least one slot), **cached** (refcount 0 but contents retained
+    under a prompt-prefix chain hash; reusable by ``lookup`` or evicted
+    LRU-first when the free list runs dry).  The pool holds exactly
+    ``batch * cache_len / block_size`` blocks — every slot maps at most
+    ``cache_len / block_size`` distinct blocks, so allocation (with
+    cached-block eviction) can never fail for an admissible request.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        self.block_size = block_size
+        self.free: list[int] = list(range(num_blocks))
+        self.refs: dict[int, int] = {}  # block -> refcount (active only)
+        self.hash_of: dict[int, Any] = {}  # registered block -> chain hash
+        self.index: dict[Any, int] = {}  # chain hash -> block
+        # refcount-0 registered blocks, insertion order == release order
+        self.cached: collections.OrderedDict[int, None] = \
+            collections.OrderedDict()
+
+    def lookup(self, h) -> int | None:
+        """Take a reference on the live block registered under chain hash
+        ``h`` (reviving it from the cached state if needed)."""
+        blk = self.index.get(h)
+        if blk is None:
+            return None
+        self.cached.pop(blk, None)
+        self.refs[blk] = self.refs.get(blk, 0) + 1
+        return blk
+
+    def alloc(self) -> int:
+        """A fresh refcount-1 block; evicts the LRU cached prefix block
+        when the free list is empty."""
+        if self.free:
+            blk = self.free.pop()
+        elif self.cached:
+            blk, _ = self.cached.popitem(last=False)
+            del self.index[self.hash_of.pop(blk)]
+        else:
+            raise RuntimeError("KV block pool exhausted")
+        self.refs[blk] = 1
+        return blk
+
+    def register(self, blk: int, h) -> None:
+        """Publish an owned, fully-written full-prompt block under its
+        chain hash (first writer wins on hash collision)."""
+        if h in self.index:
+            return
+        self.index[h] = blk
+        self.hash_of[blk] = h
+
+    def release(self, blk: int) -> None:
+        """Drop one reference; the last release frees (or, for registered
+        prefix blocks, caches) the block.  Releasing a non-active block is
+        a refcount bug and raises."""
+        rc = self.refs.get(blk, 0)
+        if rc <= 0:
+            raise RuntimeError(f"double release of KV block {blk}")
+        if rc > 1:
+            self.refs[blk] = rc - 1
+            return
+        del self.refs[blk]
+        if blk in self.hash_of:
+            self.cached[blk] = None
+        else:
+            self.free.append(blk)
+
+    @property
+    def live_blocks(self) -> int:
+        return len(self.refs)
 
 
 class Engine:
@@ -170,6 +346,29 @@ class Engine:
         mod = lm_model if fam == "lm" else whisper_model
         self._mod = mod
 
+        self.kv: attn_lib.KVCache = attn_lib.CONTIGUOUS
+        if ecfg.kv_block_size is not None:
+            if fam != "lm":
+                raise ValueError(
+                    "kv_block_size: paged KV serving supports the lm "
+                    "family only (whisper's cross-attention cache is "
+                    "static)")
+            if getattr(cfg, "vision_prefix", 0):
+                raise ValueError(
+                    "kv_block_size: paged KV serving does not support a "
+                    "vision prefix")
+            bad = [k for k in cfg.mixer_pattern if k != "attn"]
+            if bad:
+                raise ValueError(
+                    f"kv_block_size: paged KV serving needs a pure-'attn' "
+                    f"mixer stack; pattern has {bad}")
+            if ecfg.cache_len % ecfg.kv_block_size:
+                raise ValueError(
+                    f"cache_len {ecfg.cache_len} is not a multiple of "
+                    f"kv_block_size {ecfg.kv_block_size}")
+            self.kv = attn_lib.PagedKVCache(block_size=ecfg.kv_block_size)
+        kv = self.kv
+
         if fam == "whisper":
             def _prefill(params, tokens, frames):
                 return mod.prefill(params, cfg, ctx, frames, tokens,
@@ -179,22 +378,47 @@ class Engine:
                 return mod.prefill(params, cfg, ctx, tokens,
                                    cache_len=ecfg.cache_len, **kw)
 
-        def _decode(params, cache, tokens, pos):
-            return mod.decode_step(params, cfg, ctx, cache, tokens, pos)
+        if self.paged:
+            def _decode(params, cache, tokens, pos, write_mask):
+                return mod.decode_step(params, cfg, ctx, cache, tokens, pos,
+                                       kv=kv, write_mask=write_mask)
+
+            def _window(params, cache, tokens, pos_start, write_mask):
+                return lm_model.decode_window(params, cfg, ctx, cache,
+                                              tokens, pos_start, kv,
+                                              write_mask=write_mask)
+
+            def _map_slot(cache, slot, row, fresh):
+                def upd(lc):
+                    return {**lc,
+                            "table": lc["table"].at[slot].set(row),
+                            "pool_pos": lc["pool_pos"].at[fresh].set(-1)}
+                return {"layers": [upd(lc) for lc in cache["layers"]]}
+
+            self._window = jax.jit(_window)
+            self._map_slot = jax.jit(_map_slot)
+        else:
+            def _decode(params, cache, tokens, pos):
+                return mod.decode_step(params, cfg, ctx, cache, tokens, pos)
 
         def _reset(cache, slot):
-            return mod.cache_reset(cfg, cache, slot)
+            return mod.cache_reset(cfg, cache, slot, kv)
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
-        self._insert = jax.jit(mod.cache_insert)
+        self._insert = jax.jit(
+            lambda cache, sub, slots: mod.cache_insert(cache, sub, slots, kv))
         self._reset = jax.jit(_reset)
+
+    @property
+    def paged(self) -> bool:
+        return isinstance(self.kv, attn_lib.PagedKVCache)
 
     def init_cache(self) -> Params:
         """A fresh all-slots-empty serving cache (batch x cache_len)."""
         return self._mod.init_cache(self.cfg, self.ecfg.batch,
                                     self.ecfg.cache_len,
-                                    self.ctx.compute_dtype)
+                                    self.ctx.compute_dtype, kv=self.kv)
 
     @property
     def pos_offset(self) -> int:
@@ -204,13 +428,19 @@ class Engine:
             return 0
         return getattr(self.cfg, "vision_prefix", 0)
 
-    def _sample(self, logits: jax.Array, key,
+    def _sample(self, logits: jax.Array, keys, temps,
                 active: jax.Array | None = None) -> jax.Array:
+        """Per-row sampling: greedy rows (temp <= 0) take argmax, sampled
+        rows draw categorically with their own key.  ``keys=None`` is the
+        all-greedy fast path (no PRNG work at all)."""
         last = logits[:, -1, :]
-        if self.ecfg.temperature <= 0:
-            tok = jnp.argmax(last, axis=-1)
+        greedy = jnp.argmax(last, axis=-1)
+        if keys is None:
+            tok = greedy
         else:
-            tok = jax.random.categorical(key, last / self.ecfg.temperature)
+            t = jnp.maximum(temps, 1e-6)[:, None]
+            drawn = jax.vmap(jax.random.categorical)(keys, last / t)
+            tok = jnp.where(temps > 0, drawn, greedy)
         if active is not None:
             # retired slots decode junk; pin them to 0 so nothing
             # downstream has to special-case per-slot on the host
@@ -220,11 +450,16 @@ class Engine:
     def generate(self, prompts: np.ndarray, **prefill_kwargs) -> np.ndarray:
         """prompts: (B, S_prompt) int32 -> (B, max_new_tokens) int32.
 
-        Compatibility wrapper over :class:`Scheduler`: the rectangular
-        batch admits as one group (a single batched prefill, exactly the
-        old fixed-batch path) and greedy outputs are unchanged.  With
-        ``EngineConfig.eos_id`` set, rows that stop early are padded with
-        the stop token out to ``max_new_tokens``."""
+        .. deprecated::
+            ``generate`` is the legacy fixed-batch surface, kept as a thin
+            compatibility wrapper; new code should submit
+            :class:`Request` objects (with per-request
+            :class:`SamplingParams`) to a :class:`Scheduler` directly.
+
+        The rectangular batch admits as one group (a single batched
+        prefill, exactly the old fixed-batch path) and greedy outputs are
+        unchanged.  With ``EngineConfig.eos_id`` set, rows that stop early
+        are padded with the stop token out to ``max_new_tokens``."""
         prompts = np.asarray(prompts)
         b, _ = prompts.shape
         sched = Scheduler(self)
@@ -252,7 +487,9 @@ class Scheduler:
     ``{rid: (n_tokens,) int32}`` (the emitted stream, ending with the eos
     token when one triggered retirement).  ``stats`` records decode-step
     and admission counts plus per-request first-token / completion times
-    (relative to the ``run`` start) for throughput accounting."""
+    (relative to the ``run`` start) for throughput accounting.  With a
+    paged engine the loop swaps grouped prefill for per-request chunked
+    prefill + prefix sharing (module docstring has the invariants)."""
 
     def __init__(self, engine: Engine):
         self.eng = engine
@@ -261,6 +498,10 @@ class Scheduler:
         self.stats = SchedulerStats()
         self._results: dict[int, np.ndarray] = {}
         self._next_rid = 0
+        if engine.paged:
+            bs = engine.kv.block_size
+            self.bps = engine.ecfg.cache_len // bs
+            self.alloc = BlockAllocator(engine.ecfg.batch * self.bps, bs)
 
     def submit(self, request: Request) -> int:
         if request.rid is None:
@@ -298,13 +539,41 @@ class Scheduler:
             return True
         return False
 
-    def _admit(self, cache, tok, pos, key):
+    def _sample_for(self, logits, states, active=None) -> np.ndarray:
+        """Sample one token per row.  Row ``r`` draws from the key stream
+        ``fold_in(fold_in(PRNGKey(seed_r), rid_r), n_emitted_r)`` — a
+        request's sampled tokens never depend on its batchmates or on
+        admission order.  All-greedy rows short-circuit to argmax."""
+        temps = [float(st.temperature) if st is not None else 0.0
+                 for st in states]
+        if all(t <= 0 for t in temps):
+            return np.asarray(self.eng._sample(logits, None, None, active))
+        keys = jnp.stack([
+            jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(st.seed), st.rid),
+                len(st.tokens))
+            if st is not None and st.temperature > 0
+            else jax.random.PRNGKey(0)
+            for st in states])
+        return np.asarray(self.eng._sample(
+            logits, keys, jnp.asarray(temps, jnp.float32), active))
+
+    def _new_state(self, r: Request) -> SlotState:
+        sp = resolve_sampling(r, self.eng.ecfg)
+        return SlotState(
+            rid=r.rid, prompt_len=len(r.prompt), budget=sp.max_new_tokens,
+            eos_id=sp.eos_id, min_tokens=sp.min_tokens,
+            temperature=sp.temperature, seed=sp.seed)
+
+    # -- contiguous path (the PR 5 loop) -----------------------------------
+
+    def _admit(self, cache, tok, pos):
         """Fill free slots from the queue head.  The maximal FIFO run of
         same-prompt-length requests prefills as ONE jitted call (so the
         rectangular ``generate`` batch keeps its single batched prefill);
         each request's cache rows land in its slot via ``cache_insert``
         and its first token comes from the prefill logits."""
-        eng, ecfg = self.eng, self.eng.ecfg
+        eng = self.eng
         free = [i for i, s in enumerate(self.slots) if s is None]
         while free and self.queue:
             head_len = len(self.queue[0].prompt)
@@ -324,23 +593,15 @@ class Scheduler:
             logits, sub_cache = eng._prefill(
                 eng.params, jnp.asarray(prompts, jnp.int32), **kw)
             self.stats.prefills += 1
-            key, sub = jax.random.split(key)
-            first = np.asarray(eng._sample(logits, sub))
+            states = [self._new_state(r) for r in group]
+            first = self._sample_for(logits, states)
             cache = eng._insert(cache, sub_cache,
                                 jnp.asarray(taken, jnp.int32))
             start_pos = prompts.shape[1] + eng.pos_offset
             for g, i in enumerate(taken):
-                r = group[g]
-                st = SlotState(
-                    rid=r.rid, prompt_len=len(r.prompt),
-                    budget=(r.max_new_tokens if r.max_new_tokens is not None
-                            else ecfg.max_new_tokens),
-                    eos_id=(r.eos_id if r.eos_id is not None
-                            else ecfg.eos_id),
-                    min_tokens=r.min_tokens,
-                )
+                st = states[g]
                 self.slots[i] = st
-                self.stats.admissions.append((r.rid, i))
+                self.stats.admissions.append((st.rid, i))
                 if st.budget <= 0:  # zero-token request: empty stream
                     self._retire(i, st)
                     free.append(i)
@@ -349,28 +610,28 @@ class Scheduler:
                 else:
                     tok[i] = first[g]
                     pos[i] = start_pos
-        return cache, tok, pos, key
+        return cache, tok, pos
 
     def run(self) -> dict[int, np.ndarray]:
+        if self.eng.paged:
+            return self._run_paged()
         eng, ecfg = self.eng, self.eng.ecfg
         self._t0 = time.perf_counter()
         cache = eng.init_cache()
         b = ecfg.batch
         tok = np.zeros((b,), np.int32)
         pos = np.zeros((b,), np.int32)
-        key = jax.random.PRNGKey(ecfg.seed)
 
         while self.queue or any(s is not None for s in self.slots):
-            cache, tok, pos, key = self._admit(cache, tok, pos, key)
+            cache, tok, pos = self._admit(cache, tok, pos)
             active = np.array([s is not None for s in self.slots])
             if not active.any():
                 continue  # everything admitted retired on its first token
             logits, cache = eng._decode(
                 eng.params, cache, jnp.asarray(tok)[:, None],
                 jnp.asarray(pos))
-            key, sub = jax.random.split(key)
-            sampled = np.asarray(
-                eng._sample(logits, sub, jnp.asarray(active)))
+            sampled = self._sample_for(logits, self.slots,
+                                       jnp.asarray(active))
             self.stats.steps += 1
             pos = np.where(active, pos + 1, pos).astype(np.int32)
             tok = np.where(active, sampled, tok).astype(np.int32)
@@ -378,6 +639,157 @@ class Scheduler:
                 st = self.slots[i]
                 if st is not None and self._emit(i, st, int(sampled[i])):
                     cache = eng._reset(cache, jnp.int32(i))
+        return self._results
+
+    # -- paged path --------------------------------------------------------
+
+    def _release_slot(self, cache, i: int, st: SlotState):
+        """Retirement bookkeeping: drop every held block reference exactly
+        once, then unmap the slot's table row."""
+        for blk in st.blocks:
+            self.alloc.release(blk)
+        st.blocks = []
+        return self.eng._reset(cache, jnp.int32(i))
+
+    def _admit_paged(self, cache):
+        """Per-request admission: allocate the slot's block-table row
+        (reusing registered prefix blocks when ``shared_prefix`` is on)
+        and queue the slot for chunked prefill of the novel suffix."""
+        eng, ecfg = self.eng, self.eng.ecfg
+        bs = eng.kv.block_size
+        for i in range(ecfg.batch):
+            if self.slots[i] is not None or not self.queue:
+                continue
+            r = self.queue.popleft()
+            if r.prefill_kwargs:
+                raise ValueError(
+                    "paged serving is text-only (no prefill_kwargs)")
+            prompt = np.ascontiguousarray(np.asarray(r.prompt, np.int32))
+            st = self._new_state(r)
+            st.phase = "prefill"
+            st.prompt = prompt
+            self.stats.admissions.append((st.rid, i))
+            if st.budget <= 0:  # zero-token request: empty stream
+                self.slots[i] = st
+                self._retire(i, st)
+                continue
+            ln = len(prompt)
+            if ecfg.shared_prefix:
+                # chain hash per FULL prompt block; block j's hash pins the
+                # whole prefix prompt[:(j+1)*bs], not just its own tokens
+                h = 0
+                for j in range(ln // bs):
+                    h = hash((h, prompt[j * bs:(j + 1) * bs].tobytes()))
+                    st.block_hashes.append(h)
+            n_sh = 0
+            if ecfg.shared_prefix:
+                # cap at (ln-1)//bs: the last prompt token (and everything
+                # decode writes) stays strictly past every shared block
+                for j in range((ln - 1) // bs):
+                    blk = self.alloc.lookup(st.block_hashes[j])
+                    if blk is None:
+                        break
+                    st.blocks.append(blk)
+                    n_sh += 1
+            fresh = [self.alloc.alloc() for _ in range(self.bps - n_sh)]
+            st.blocks += fresh
+            st.n_shared = n_sh
+            st.prefill_done = n_sh * bs
+            self.stats.shared_tokens += n_sh * bs
+            self.slots[i] = st
+            # pad the fresh-block list to a fixed width so _map_slot stays
+            # one compile (repeated pos-resets are idempotent)
+            pad = np.full((self.bps,), fresh[0], np.int32)
+            pad[:len(fresh)] = fresh
+            cache = eng._map_slot(cache, jnp.int32(i),
+                                  jnp.asarray(st.blocks, jnp.int32),
+                                  jnp.asarray(pad))
+        return cache
+
+    def _prefill_chunk(self, cache, tok, pos, pre: list[int], chunk: int):
+        """Advance every prefilling slot by one window of up to ``chunk``
+        tokens (width = min remaining, so no row overruns its prompt).  A
+        row whose window ends on its last prompt token samples its first
+        output from the window logits — the same position contiguous
+        prefill samples from — and flips to decode."""
+        eng, ecfg = self.eng, self.eng.ecfg
+        b = ecfg.batch
+        c = min([self.slots[i].prompt_len - self.slots[i].prefill_done
+                 for i in pre] + [chunk])
+        tokens = np.zeros((b, c), np.int32)
+        pos_start = np.zeros((b,), np.int32)
+        wm = np.zeros((b,), bool)
+        for i in pre:
+            st = self.slots[i]
+            tokens[i] = st.prompt[st.prefill_done:st.prefill_done + c]
+            pos_start[i] = st.prefill_done
+            wm[i] = True
+        logits, cache = eng._window(
+            eng.params, cache, jnp.asarray(tokens), jnp.asarray(pos_start),
+            jnp.asarray(wm))
+        self.stats.prefills += 1
+        self.stats.prefill_tokens += c * len(pre)
+        fin = [i for i in pre
+               if self.slots[i].prefill_done + c == self.slots[i].prompt_len]
+        first = None
+        if fin:
+            states = [self.slots[i] if i in fin else None for i in range(b)]
+            first = self._sample_for(
+                logits, states,
+                jnp.asarray([s is not None for s in states]))
+        for i in pre:
+            st = self.slots[i]
+            st.prefill_done += c
+            if st.prefill_done < st.prompt_len:
+                continue
+            if ecfg.shared_prefix:
+                # the slot's own full prompt blocks are now written; make
+                # them discoverable for later identical-prefix requests
+                for j in range(st.n_shared, len(st.block_hashes)):
+                    self.alloc.register(st.blocks[j], st.block_hashes[j])
+            st.phase = "decode"
+            st.prompt = None  # the cache holds it now
+            if self._emit(i, st, int(first[i])):
+                cache = self._release_slot(cache, i, st)
+            else:
+                tok[i] = first[i]
+                pos[i] = st.prompt_len
+        return cache, tok, pos
+
+    def _run_paged(self) -> dict[int, np.ndarray]:
+        eng, ecfg = self.eng, self.eng.ecfg
+        self._t0 = time.perf_counter()
+        cache = eng.init_cache()
+        b = ecfg.batch
+        tok = np.zeros((b,), np.int32)
+        pos = np.zeros((b,), np.int32)
+        chunk = ecfg.prefill_chunk or ecfg.cache_len
+
+        while self.queue or any(s is not None for s in self.slots):
+            cache = self._admit_paged(cache)
+            pre = [i for i, s in enumerate(self.slots)
+                   if s is not None and s.phase == "prefill"]
+            if pre:
+                cache, tok, pos = self._prefill_chunk(cache, tok, pos,
+                                                      pre, chunk)
+            dec = np.array([s is not None and s.phase == "decode"
+                            for s in self.slots])
+            if not dec.any():
+                continue  # all slots still prefilling (or just drained)
+            logits, cache = eng._decode(
+                eng.params, cache, jnp.asarray(tok)[:, None],
+                jnp.asarray(pos), jnp.asarray(dec))
+            states = [s if (s is not None and s.phase == "decode") else None
+                      for s in self.slots]
+            sampled = self._sample_for(logits, states, jnp.asarray(dec))
+            self.stats.steps += 1
+            pos = np.where(dec, pos + 1, pos).astype(np.int32)
+            tok = np.where(dec, sampled, tok).astype(np.int32)
+            for i in range(b):
+                st = self.slots[i]
+                if (st is not None and st.phase == "decode"
+                        and self._emit(i, st, int(sampled[i]))):
+                    cache = self._release_slot(cache, i, st)
         return self._results
 
 

@@ -295,12 +295,16 @@ def test_generate_eos_stops_early_and_pads():
 def test_generate_seed_reproducible():
     """EngineConfig.seed drives sampled decoding: same seed -> identical
     streams, different seed -> different streams, and the first token no
-    longer reuses the step key (the PRNG satellite fix)."""
+    longer reuses the step key (the PRNG satellite fix).
+
+    Temperature is high because random-init logits are peaked: at low
+    temperature every per-row key draws the argmax token, which keeps the
+    same-seed check but makes the different-seed assertion vacuous."""
     rng = np.random.default_rng(3)
     prompts = np.stack([_prompt(rng, 5), _prompt(rng, 5)])
-    out_a = _fp_engine(2, temperature=0.8, seed=5).generate(prompts)
-    out_b = _fp_engine(2, temperature=0.8, seed=5).generate(prompts)
-    out_c = _fp_engine(2, temperature=0.8, seed=6).generate(prompts)
+    out_a = _fp_engine(2, temperature=8.0, seed=5).generate(prompts)
+    out_b = _fp_engine(2, temperature=8.0, seed=5).generate(prompts)
+    out_c = _fp_engine(2, temperature=8.0, seed=6).generate(prompts)
     np.testing.assert_array_equal(out_a, out_b)
     assert not np.array_equal(out_a, out_c)
 
