@@ -28,6 +28,10 @@ BENCH files are comparable across PRs.
   serve       continuous-batching scheduler vs fixed-batch decode: the
               greedy token-equivalence gate (per request, incl. the packed
               engine) + the mixed-length early-eos throughput/TTFT row
+  train       sharded DP train-step gates: uncompressed-DP == single-device
+              bit-identity (the psum oracle) + 1-bit EF compressed training
+              within loss tolerance of uncompressed; also writes the
+              tracker JSONL artifact (needs >= 2 devices)
 
 --smoke shrinks the swept shapes (the CI bench-smoke job);
 --fail-on-mismatch exits non-zero if any equivalence row disagrees with
@@ -88,7 +92,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig3,pack,kbit,shard,decode,"
                          "overlap,table1,table2,accuracy,lm_sizes,equiv,"
-                         "serve")
+                         "serve,train")
     ap.add_argument("--json", default=None)
     ap.add_argument("--merge-json", action="store_true",
                     help="seed output from the existing --json file "
@@ -163,6 +167,10 @@ def main() -> None:
         from benchmarks import serve_bench
         _emit("serve", serve_bench.rows(args.smoke), out, fresh)
 
+    if want("train"):
+        from benchmarks import train_bench
+        _emit("train", train_bench.rows(args.smoke), out, fresh)
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)
@@ -175,14 +183,17 @@ def main() -> None:
         # oracle, overlap_gate rows gate overlap_collective on == off ==
         # single-device, and serve equivalence rows gate continuous-batching
         # greedy tokens against the per-request fixed-batch engine
-        # (throughput rows carry no exact_match and pass through)
+        # (throughput rows carry no exact_match and pass through), and
+        # train rows gate uncompressed-DP == single-device bit-identity
+        # plus compressed-vs-uncompressed loss tolerance
         rows = (out.get("equivalence", []) + out.get("shard_sweep", [])
                 + out.get("pack_prologue", []) + out.get("decode", [])
-                + out.get("overlap_gate", []) + out.get("serve", []))
+                + out.get("overlap_gate", []) + out.get("serve", [])
+                + out.get("train", []))
         if not rows:
             print("--fail-on-mismatch: no gated rows were produced "
-                  "(include 'equiv', 'shard', 'pack', 'decode', 'overlap' "
-                  "and/or 'serve' in --only)", file=sys.stderr)
+                  "(include 'equiv', 'shard', 'pack', 'decode', 'overlap', "
+                  "'serve' and/or 'train' in --only)", file=sys.stderr)
             raise SystemExit(1)
         bad = [r for r in rows if not r.get("exact_match", True)]
         if bad:

@@ -11,6 +11,10 @@
   ``restore(..., shardings=...)`` device_puts into whatever mesh the
   restarted job has — shrink/grow the data axis and the state reshards.
 * **retention**: keep the latest N checkpoints.
+* **train-state aware**: dataclass pytrees flatten field-wise, so a
+  ``train.trainer.TrainState`` (master params + opt state + the 1-bit EF
+  gradient-compression residual) saves/restores as one tree and a resumed
+  compressed run is bit-identical to an uninterrupted one.
 * **packed export**: ``export_packed`` runs the BMXNet model converter on a
   float checkpoint and writes the 1-bit serving artifact (29x smaller —
   paper §2.2.3), which serve.py loads.
@@ -22,6 +26,7 @@ already carries per-leaf metadata to support that layout).
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import shutil
@@ -37,9 +42,19 @@ Pytree = Any
 _SEP = "|"  # path separator safe for npz keys
 
 
+def _is_dataclass_node(x: Any) -> bool:
+    # dataclass *instances* flatten field-wise (train.trainer.TrainState);
+    # excludes dataclass types themselves
+    return dataclasses.is_dataclass(x) and not isinstance(x, type)
+
+
 def _flatten(tree: Pytree, prefix: str = "") -> dict[str, Any]:
     out = {}
-    if isinstance(tree, dict):
+    if _is_dataclass_node(tree):
+        for f in dataclasses.fields(tree):
+            key = f"{prefix}{_SEP}{f.name}" if prefix else f.name
+            out.update(_flatten(getattr(tree, f.name), key))
+    elif isinstance(tree, dict):
         for k, v in tree.items():
             out.update(_flatten(v, f"{prefix}{_SEP}{k}" if prefix else str(k)))
     elif isinstance(tree, (list, tuple)):
@@ -53,6 +68,14 @@ def _flatten(tree: Pytree, prefix: str = "") -> dict[str, Any]:
 
 
 def _unflatten_into(template: Pytree, flat: dict[str, Any], prefix: str = ""):
+    if _is_dataclass_node(template):
+        return type(template)(**{
+            f.name: _unflatten_into(
+                getattr(template, f.name), flat,
+                f"{prefix}{_SEP}{f.name}" if prefix else f.name,
+            )
+            for f in dataclasses.fields(template)
+        })
     if isinstance(template, dict):
         return {
             k: _unflatten_into(v, flat, f"{prefix}{_SEP}{k}" if prefix else str(k))

@@ -90,3 +90,83 @@ class QuantPolicy:
         """Table 2: keep given stages full precision (e.g. ``("stage1",)``)."""
         rules = tuple((p, FP32_SPEC) for p in stage_patterns) + self.rules
         return dataclasses.replace(self, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Step-indexed policy schedules — the BNN-training knobs of Bethge et al.
+# 1809.10463, consumed by the trainer (train/trainer.PolicyScheduledStep):
+# the active QuantPolicy is a pure function of the step index, and since a
+# policy is jit-static each stage owns one compiled train step.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySchedule:
+    """Piecewise-constant ``step -> QuantPolicy`` schedule.
+
+    ``stages`` is a sorted tuple of ``(start_step, policy)`` pairs; the
+    first stage must start at 0.  ``at(step)`` returns the policy whose
+    stage contains ``step``; ``stage_index`` gives the stage ordinal (the
+    trainer keys its per-stage compiled steps on it).
+    """
+
+    stages: tuple[tuple[int, QuantPolicy], ...]
+
+    def __post_init__(self):
+        if not self.stages:
+            raise ValueError("PolicySchedule needs at least one stage")
+        starts = [s for s, _ in self.stages]
+        if starts[0] != 0:
+            raise ValueError(f"first stage must start at step 0, got {starts[0]}")
+        if starts != sorted(starts) or len(set(starts)) != len(starts):
+            raise ValueError(f"stage starts must be strictly increasing: {starts}")
+
+    def stage_index(self, step: int) -> int:
+        idx = 0
+        for i, (start, _) in enumerate(self.stages):
+            if step >= start:
+                idx = i
+        return idx
+
+    def at(self, step: int) -> QuantPolicy:
+        return self.stages[self.stage_index(step)][1]
+
+    def boundaries(self) -> tuple[int, ...]:
+        """Steps at which the active policy changes (recompile points)."""
+        return tuple(s for s, _ in self.stages[1:])
+
+    @classmethod
+    def constant(cls, policy: QuantPolicy) -> "PolicySchedule":
+        return cls(stages=((0, policy),))
+
+    @classmethod
+    def two_stage_binarization(
+        cls,
+        switch_step: int,
+        *,
+        stage1_a_bits: int = FULL_PRECISION,
+        scale: bool = False,
+        xnor_range: bool = False,
+    ) -> "PolicySchedule":
+        """1809.10463 two-stage training: binarize weights from step 0 but
+        keep activations at ``stage1_a_bits`` (default full precision) until
+        ``switch_step``, then binarize both — the activation quantizer is
+        the harsher gradient bottleneck, so the weights settle first."""
+        stage1 = QuantPolicy(w_bits=1, a_bits=stage1_a_bits, scale=scale,
+                             xnor_range=xnor_range)
+        stage2 = QuantPolicy.binary(scale=scale, xnor_range=xnor_range)
+        return cls(stages=((0, stage1), (switch_step, stage2)))
+
+    @classmethod
+    def scale_schedule(
+        cls, switch_step: int, *, scale_first: bool = True,
+        xnor_range: bool = False,
+    ) -> "PolicySchedule":
+        """Scaling policy: run the XNOR-Net per-channel alpha for the first
+        ``switch_step`` steps, then drop it (1809.10463 finds the scaling
+        unnecessary once training stabilizes — ``scale_first=False`` flips
+        the order for the ablation)."""
+        on = QuantPolicy.binary(scale=True, xnor_range=xnor_range)
+        off = QuantPolicy.binary(scale=False, xnor_range=xnor_range)
+        first, second = (on, off) if scale_first else (off, on)
+        return cls(stages=((0, first), (switch_step, second)))

@@ -12,7 +12,25 @@ axis.
 
 ``compressed_psum`` is the collective form used inside ``shard_map``: each
 member compresses locally, the compressed leaves are averaged over the
-named axis, and the residual state stays local.
+named axis, and the residual state stays local.  The trainer caller
+(train/trainer.make_sharded_train_step) uses it like this::
+
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+
+    def body(params, ef, batch):          # ef leaves: (dp, *param.shape)
+        grads = grad_fn(params, batch)    # per-member grads on the shard
+        e_local = jax.tree.map(lambda x: x[0], ef)   # this member's slice
+        grads, e_new = compressed_psum(grads, e_local, "data")
+        return update(params, grads), jax.tree.map(lambda x: x[None], e_new)
+
+    step = shard_map(body, mesh=mesh,
+                     in_specs=(P(), P("data"), P("data")),
+                     out_specs=(P(), P("data")), check_vma=False)
+
+The residual pytree is carried in ``TrainState.ef`` with a leading sharded
+member axis, so checkpointing the state (ckpt/manager.py) makes a resumed
+compressed run bit-identical to an uninterrupted one.
 """
 
 from __future__ import annotations

@@ -36,7 +36,11 @@ def lm_loss(model_forward, params, cfg, ctx, batch, remat=False,
         targets = jnp.concatenate([pad, targets], axis=1)
     ce = cross_entropy(logits, targets)
     loss = ce + AUX_WEIGHT * aux
-    return loss, {"ce": ce, "aux": aux}
+    # n_tokens: positions the CE actually covered — the throughput
+    # denominator (trainer sums it across microbatches/DP members instead
+    # of averaging; see trainer.SUM_AUX_KEYS)
+    n_tok = jnp.sum(targets != IGNORE).astype(jnp.float32)
+    return loss, {"ce": ce, "aux": aux, "n_tokens": n_tok}
 
 
 def whisper_loss(model_forward, params, cfg, ctx, batch, remat=False,
@@ -45,4 +49,5 @@ def whisper_loss(model_forward, params, cfg, ctx, batch, remat=False,
     logits, aux = model_forward(params, cfg, ctx, batch["frames"],
                                 batch["tokens"])
     ce = cross_entropy(logits, batch["targets"])
-    return ce, {"ce": ce, "aux": aux}
+    n_tok = jnp.sum(batch["targets"] != IGNORE).astype(jnp.float32)
+    return ce, {"ce": ce, "aux": aux, "n_tokens": n_tok}

@@ -1,0 +1,110 @@
+"""Tracker — the metrics emission layer of the trainer (levanter-style).
+
+A :class:`Tracker` receives one flat ``{name: scalar}`` dict per logging
+interval via ``log(metrics, step=...)`` and is closed with ``finish()``.
+The trainer and the train bench emit through this seam so every consumer
+(the CI bench pipeline, a human tailing a file, a no-op in unit tests)
+sees the same stream: loss, tokens/sec, grad-compression ratio, and the
+per-layer **bit-flip rate** (fraction of binarized weights whose sign
+changed this step — the training-health signal of Bethge et al.
+1809.10463: a healthy BNN run starts with high flip rates that decay as
+the signs settle; a flat-zero or non-decaying curve is a dead or thrashing
+run).
+
+Implementations:
+
+* :class:`NoopTracker` — swallows everything (the default).
+* :class:`JsonlTracker` — appends one JSON object per ``log`` call
+  (``{"step": N, ...metrics}``) to a file; the artifact the bench-smoke CI
+  job uploads next to ``BENCH_ci.json``.
+* :class:`CompositeTracker` — fans out to several trackers.
+
+All trackers are context managers (``finish`` on exit) and coerce jax/numpy
+scalars to Python floats, so ``log`` can be fed a jitted step's metrics
+dict directly.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from typing import Any, Mapping
+
+
+def _to_float(v: Any) -> float:
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return math.nan
+
+
+class Tracker:
+    """Metric sink interface: ``log(metrics, step=...)`` then ``finish()``."""
+
+    def log(self, metrics: Mapping[str, Any], *, step: int) -> None:
+        raise NotImplementedError
+
+    def finish(self) -> None:  # idempotent
+        pass
+
+    def __enter__(self) -> "Tracker":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.finish()
+
+
+class NoopTracker(Tracker):
+    def log(self, metrics: Mapping[str, Any], *, step: int) -> None:
+        pass
+
+
+class JsonlTracker(Tracker):
+    """One JSON object per ``log`` call, appended to ``path``.
+
+    Each line is ``{"step": N, "<name>": <float>, ...}``; lines are flushed
+    on write so a crashed run keeps everything logged so far, and the file
+    is valid JSONL at every instant (the bench pipeline ingests partial
+    files).
+    """
+
+    def __init__(self, path: str, *, append: bool = False):
+        self.path = path
+        self._f = open(path, "a" if append else "w")
+
+    def log(self, metrics: Mapping[str, Any], *, step: int) -> None:
+        if self._f is None:
+            raise ValueError(f"JsonlTracker({self.path!r}) already finished")
+        row = {"step": int(step)}
+        row.update({k: _to_float(v) for k, v in metrics.items()})
+        self._f.write(json.dumps(row) + "\n")
+        self._f.flush()
+
+    def finish(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+
+class CompositeTracker(Tracker):
+    def __init__(self, trackers: list[Tracker]):
+        self.trackers = list(trackers)
+
+    def log(self, metrics: Mapping[str, Any], *, step: int) -> None:
+        for t in self.trackers:
+            t.log(metrics, step=step)
+
+    def finish(self) -> None:
+        for t in self.trackers:
+            t.finish()
+
+
+def read_jsonl(path: str) -> list[dict]:
+    """Parse a JsonlTracker artifact back into a list of metric rows."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

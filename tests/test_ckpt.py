@@ -79,6 +79,43 @@ def test_export_packed(tmp_path):
     assert any("w_packed" in k for k in data.files)
 
 
+def test_dataclass_roundtrip_empty_ef(tmp_path):
+    """TrainState (a dataclass pytree) flattens field-wise; the empty-ef
+    form (compression off) round-trips to an empty dict."""
+    from repro.train.trainer import TrainState
+
+    state = TrainState(params=_tree()["params"],
+                       opt_state={"step": jnp.asarray(3, jnp.int32)},
+                       ef={})
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, state)
+    step, got = mgr.restore(state)
+    assert step == 1 and isinstance(got, TrainState)
+    assert got.ef == {}
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dataclass_roundtrip_ef_tree(tmp_path):
+    """The EF residual tree — leaves with a leading (dp,) member axis —
+    survives save/restore bit-exactly (compressed-resume correctness)."""
+    from repro.train.trainer import TrainState
+
+    rng = np.random.default_rng(0)
+    ef = {"layers": [{"w": rng.standard_normal((4, 8, 8)).astype(np.float32)}
+                     for _ in range(2)]}
+    state = TrainState(params=_tree()["params"],
+                       opt_state={"step": jnp.asarray(9, jnp.int32)},
+                       ef=ef)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(2, state)
+    _, got = mgr.restore(state)
+    assert isinstance(got, TrainState)
+    for lay_a, lay_b in zip(ef["layers"], got.ef["layers"]):
+        np.testing.assert_array_equal(lay_a["w"], lay_b["w"])
+        assert lay_b["w"].shape[0] == 4
+
+
 def test_restore_with_shardings(tmp_path):
     """Elastic restore: restore onto explicit (1-device) shardings."""
     mgr = CheckpointManager(str(tmp_path))

@@ -1,5 +1,7 @@
 """Integration: training actually learns (fp and binary), microbatching is
-consistent, remat doesn't change the math."""
+consistent (including aux metrics), remat doesn't change the math, and the
+sharded DP step is bit-identical to the single-device step (uncompressed)
+or still learns (1-bit EF compressed)."""
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +67,91 @@ def test_microbatch_equivalence():
 
     # CE is per-token mean; microbatches have equal token counts
     np.testing.assert_allclose(run(None), run(4), rtol=2e-3)
+
+
+def test_microbatch_aux_metrics_parity():
+    """Regression: the microbatch scan used to drop aux metrics (aux = {});
+    now both paths report the full set, with counters summed and the rest
+    averaged across chunks."""
+    spec = registry.get("granite-3-2b")
+    cfg = spec.smoke
+    ctx = QCtx(policy=QuantPolicy.full_precision(), compute_dtype=jnp.float32)
+    opt = adamw.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    dcfg = synthetic.DataConfig(cfg.vocab_size, seq_len=16, global_batch=8)
+    batch = synthetic.batch_at(dcfg, 0)
+
+    def metrics(micro):
+        params, opt_state = trainer.init_all(spec, cfg, jax.random.PRNGKey(0))
+        fn = jax.jit(trainer.make_train_step(spec, cfg, ctx, opt,
+                                             remat=False, microbatch=micro))
+        _, _, m = fn(params, opt_state, batch)
+        return m
+
+    m1, m4 = metrics(None), metrics(4)
+    for key in ("ce", "aux", "n_tokens"):
+        assert key in m1 and key in m4, key
+    assert set(m1) == set(m4)
+    # n_tokens is a counter: summed over chunks, not averaged
+    assert float(m1["n_tokens"]) == float(m4["n_tokens"]) == 8 * 16
+    np.testing.assert_allclose(float(m1["ce"]), float(m4["ce"]), rtol=2e-3)
+
+
+def _dp_mesh_or_skip(dp):
+    if len(jax.devices()) < dp:
+        pytest.skip(f"needs {dp} devices, have {len(jax.devices())}")
+    return jax.make_mesh((dp, 1), ("data", "model"))
+
+
+@pytest.mark.parametrize("dp", [2, 4, 8])
+def test_dp_uncompressed_bit_identical(dp):
+    """The uncompressed DP step is BIT-identical to the single-device step
+    with microbatch=dp at every split: XLA's psum over 'data' continues
+    the same left-fold reduction order as the microbatch scan."""
+    mesh = _dp_mesh_or_skip(dp)
+    spec = registry.get("granite-3-2b")
+    cfg = spec.smoke
+    ctx = QCtx(policy=QuantPolicy.binary(), compute_dtype=jnp.float32)
+    opt = adamw.AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=10)
+    dcfg = synthetic.DataConfig(cfg.vocab_size, seq_len=16, global_batch=8)
+
+    params, opt_state = trainer.init_all(spec, cfg, jax.random.PRNGKey(0))
+    single = jax.jit(trainer.make_train_step(spec, cfg, ctx, opt,
+                                             remat=False, microbatch=dp))
+    state = trainer.train_state_init(spec, cfg, jax.random.PRNGKey(0))
+    sharded = jax.jit(trainer.make_sharded_train_step(
+        spec, cfg, ctx, opt, trainer.TrainConfig(grad_compress=False), mesh))
+
+    with mesh:
+        for i in range(3):
+            batch = synthetic.batch_at(dcfg, i)
+            params, opt_state, ms = single(params, opt_state, batch)
+            state, md = sharded(state, batch)
+            assert float(ms["loss"]) == float(md["loss"]), (i, dp)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dp_compressed_learns():
+    """1-bit EF gradient compression still trains the BNN (the residual
+    feedback repays the quantization error over steps)."""
+    dp, steps = 4, 40
+    mesh = _dp_mesh_or_skip(dp)
+    spec = registry.get("granite-3-2b")
+    cfg = spec.smoke
+    ctx = QCtx(policy=QuantPolicy.binary(), compute_dtype=jnp.float32)
+    opt = adamw.AdamWConfig(lr=6e-3, warmup_steps=5, total_steps=steps)
+    dcfg = synthetic.DataConfig(cfg.vocab_size, seq_len=32, global_batch=8)
+    state = trainer.train_state_init(spec, cfg, jax.random.PRNGKey(0),
+                                     grad_compress=True, dp=dp)
+    fn = jax.jit(trainer.make_sharded_train_step(
+        spec, cfg, ctx, opt, trainer.TrainConfig(grad_compress=True), mesh))
+    losses = []
+    with mesh:
+        for i in range(steps):
+            state, m = fn(state, synthetic.batch_at(dcfg, i))
+            losses.append(float(m["loss"]))
+    assert float(m["grad_compress_ratio"]) > 25.0
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5, losses[-5:]
 
 
 def test_remat_matches_no_remat():
