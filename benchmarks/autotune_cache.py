@@ -67,6 +67,12 @@ def shapes(full: bool):
     # decode --smoke serving shape (N=64, K=512) at the swept widths
     for m in (1, 8, 32, 64):
         yield (m, 64, _kw(512)), ("vpu-k4", "mxu-k4", "vpu-k8", "mxu-k8")
+    # speculative-draft decode shapes: the w1a1 draft decodes through the
+    # 1-bit backends at tiny M — batch rows for draft steps, batch * 2
+    # for the restart window (serve/engine.py's spec mode) — so its
+    # per-token calls run measured tiles too
+    for m in (2, 4, 8):
+        yield (m, 64, _kw(512)), ("vpu", "mxu")
     if full:
         for ch in (64, 128, 256, 512):  # fig1 full: kernel=5, spatial=4
             yield conv_shape(64, 5, ch, 200, 4), ("vpu", "mxu")

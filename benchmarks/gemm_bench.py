@@ -394,6 +394,58 @@ def overlap_rows(small: bool = False):
                     "exact_match": bool((got == base).all()),
                 }
 
+    # packed-operand and grouped/expert shard paths ride the same ring
+    # now (PR 9) — gate each entry point at one split
+    ways = 4 if ndev >= 4 else 2
+    mesh = jax.make_mesh((ways,), ("model",))
+    ap = bitpack.pack_sign(jnp.where(x >= 0, 1.0, -1.0))
+    wp1 = bitpack.pack_sign(jnp.where(w.T >= 0, 1.0, -1.0))
+    base1 = np.asarray(dispatch.packed_gemm(
+        ap, wp1, k_true=k, config=GemmConfig(backend="vpu")))
+
+    def run_packed(cfg):
+        return dispatch.packed_gemm(ap, wp1, k_true=k, config=cfg)
+
+    for fam in ("vpu", "mxu"):
+        for overlap in (False, True):
+            cfg = GemmConfig(backend=f"shard-{fam}", mesh=mesh,
+                             shard_layout="k", overlap_collective=overlap)
+            got = np.asarray(run_packed(cfg))
+            t_us = _time(run_packed, cfg, warmup=0, iters=2)
+            yield {
+                "backend": f"shard-{fam}-packed/k", "ways": ways,
+                "overlap": overlap, "M": m, "N": n, "K": k,
+                "bits": 1, "devices": ndev,
+                "sharded_us": round(t_us, 1),
+                "exact_match": bool((got == base1).all()),
+            }
+
+    e, t_rows = 2, m
+    w_grp = jnp.stack([jnp.where(w.T >= 0, 1.0, -1.0),
+                       jnp.where(w.T >= 0, -1.0, 1.0)])
+    w_grp_p = jnp.stack([bitpack.pack_sign(w_grp[i]) for i in range(e)])
+    gs = jnp.asarray([t_rows - 3, 3], jnp.int32)
+    base_g = np.asarray(dispatch.quant_gemm_grouped(
+        x, w_grp_p, gs, k_true=k, config=GemmConfig(backend="vpu")))
+
+    def run_grouped(cfg):
+        return dispatch.quant_gemm_grouped(x, w_grp_p, gs, k_true=k,
+                                           config=cfg)
+
+    for fam in ("vpu", "mxu"):
+        for overlap in (False, True):
+            cfg = GemmConfig(backend=f"shard-{fam}", mesh=mesh,
+                             shard_layout="k", overlap_collective=overlap)
+            got = np.asarray(run_grouped(cfg))
+            t_us = _time(run_grouped, cfg, warmup=0, iters=2)
+            yield {
+                "backend": f"shard-{fam}-grouped/k", "ways": ways,
+                "overlap": overlap, "E": e, "M": m, "N": n, "K": k,
+                "bits": 1, "devices": ndev,
+                "sharded_us": round(t_us, 1),
+                "exact_match": bool((got == base_g).all()),
+            }
+
 
 def kbit_rows(small: bool = False):
     """Sweep bit width k over a fixed conv-mapped GEMM (jnp/XLA reference

@@ -214,6 +214,39 @@ def _pack_layer(node, path, spec, report: SizeReport, keep_float: bool):
     return out
 
 
+def derive_draft(
+    params: Pytree, cfg, *, n_layers: int | None = None,
+    policy: QuantPolicy | None = None, keep_float: bool = False,
+) -> tuple[Pytree, Any, SizeReport]:
+    """Derive a 1-bit draft model from a target LM checkpoint: depth-slice
+    the leading ``n_layers`` blocks (default: a quarter of the stack,
+    minimum one) and bit-pack the slice under ``policy`` (default
+    ``QuantPolicy.binary()`` — the paper's w1a1 xnor tier).
+
+    The draft keeps the target's embedding, final norm, and lm head, so
+    it is the "early exit" of the target through the cheap packed-GEMM
+    path: the serving-side cash-out of Fig. 1's xnor speedup, because a
+    draft token costs ``n_layers/N`` binarized blocks while the target
+    verifies whole windows per call (serve/engine.py's speculative mode —
+    greedy output stays token-identical to the target regardless of how
+    good this draft is, the draft only sets the acceptance rate).
+
+    ``cfg`` is any config with an ``n_layers`` field (duck-typed via
+    ``dataclasses.replace`` so this works for LMConfig without importing
+    the models package).  Returns ``(draft_params, draft_cfg, report)``.
+    """
+    policy = QuantPolicy.binary() if policy is None else policy
+    total = len(params["layers"])
+    n = max(1, total // 4) if n_layers is None else n_layers
+    if not 1 <= n <= total:
+        raise ValueError(f"draft n_layers {n} not in [1, {total}]")
+    sliced = {k: v for k, v in params.items() if k != "layers"}
+    sliced["layers"] = list(params["layers"][:n])
+    draft_cfg = dataclasses.replace(cfg, n_layers=n)
+    draft_params, report = convert(sliced, policy, keep_float=keep_float)
+    return draft_params, draft_cfg, report
+
+
 def abstract_packed(params: Pytree, policy: QuantPolicy) -> Pytree:
     """Shape-only version of :func:`convert` for the multi-pod dry-run:
     maps a pytree of ShapeDtypeStructs to the packed layout without

@@ -437,9 +437,13 @@ class GemmConfig:
     layer's fused in-body quantize->pack prologue starts while the last
     hops drain.  Raw partials are int32 and integer addition is exact in
     any order, so results are BIT-IDENTICAL to the sequential path (CI
-    gates this).  Honored by the dense float-activation ``"k"``-layout
-    paths (1-bit and k-bit, all shard families); the packed-operand and
-    grouped paths keep the sequential psum.
+    gates this).  Honored by EVERY ``"k"``-layout shard path — dense
+    float-activation, packed-operand, and grouped/expert-parallel (1-bit
+    and k-bit, all shard families); the ``"n"`` layout has no contraction
+    collective to overlap.  On the grouped paths the ring runs inside
+    each expert-axis group (the expert axis partitions rows, it never
+    reduces); the k-bit T row-sum sliver keeps its plain psum — nothing
+    hides behind a collective that small.
     """
 
     backend: str = "vpu"
@@ -1119,6 +1123,30 @@ def _shard_gemm(inner, ap, bp, k_true, tiles, config):
     ap_p = _pad_axis(ap, 1, ns)  # zero words: 0 mismatches / counted pads
     bp_p = _pad_axis(bp, 1, ns)
     kw_loc = ap_p.shape[1] // ns
+    if config.overlap_collective:
+        # ring-overlap variant (see _ring_chunk_reduce); bit-identical
+        nc = _round_up(n, ns) // ns
+        bp_p = _pad_axis(bp_p, 0, ns)
+        t = config.tiles(m, nc, kw_loc, backend=inner)
+
+        def body_ring(a_loc, b_loc):
+            def chunk(c):
+                b_c = jax.lax.dynamic_slice_in_dim(b_loc, c * nc, nc,
+                                                   axis=0)
+                if inner == "vpu":
+                    return _vpu_raw(a_loc, b_c, t, interp)
+                return _mxu_raw(a_loc, b_c, t, interp)[0]
+
+            return _ring_chunk_reduce(chunk, axis=part.reduce_axis, ns=ns,
+                                      nc=nc)
+
+        raw = shard_map(body_ring, mesh=mesh, in_specs=(part.a, part.w),
+                        out_specs=part.out, check_vma=False)(ap_p, bp_p)
+        raw = raw[:, :n]
+        if inner == "vpu":
+            return k_true - 2 * raw
+        return raw - mxu_pad_inflation(ns * _round_up(kw_loc, t.bkw),
+                                       k_true)
     t = config.tiles(m, n, kw_loc, backend=inner)
     if inner == "vpu":
 
@@ -1159,6 +1187,30 @@ def _shard_gemm_grouped(inner, buckets, w_stack, k_true, tiles, config):
     b_p = _pad_axis(_pad_axis(buckets, 0, es), 2, ns)
     w_p = _pad_axis(_pad_axis(w_stack, 0, es), 2, ns)
     kw_loc = b_p.shape[-1] // ns
+    if config.overlap_collective:
+        # ring-overlap variant inside each expert-axis group (see
+        # _ring_chunk_reduce); bit-identical
+        nc = _round_up(n, ns) // ns
+        w_p = _pad_axis(w_p, 1, ns)
+        t = config.tiles(ec, nc, kw_loc, backend=inner)
+
+        def body_ring(b_loc, wl):
+            def chunk(c):
+                w_c = jax.lax.dynamic_slice_in_dim(wl, c * nc, nc, axis=1)
+                if inner == "vpu":
+                    return _vpu_raw_grouped(b_loc, w_c, t, interp)
+                return _mxu_raw_grouped(b_loc, w_c, t, interp)[0]
+
+            return _ring_chunk_reduce(chunk, axis=part.reduce_axis, ns=ns,
+                                      nc=nc)
+
+        raw = shard_map(body_ring, mesh=mesh, in_specs=(part.a, part.w),
+                        out_specs=part.out, check_vma=False)(b_p, w_p)
+        raw = raw[..., :n]
+        if inner == "vpu":
+            return (k_true - 2 * raw)[:e]
+        words = ns * _round_up(kw_loc, t.bkw)
+        return (raw - mxu_pad_inflation(words, k_true))[:e]
     t = config.tiles(ec, n, kw_loc, backend=inner)
     if inner == "vpu":
 
@@ -1205,6 +1257,24 @@ def _shard_kbit_gemm(family, a_planes, b_planes, tiles, config):
     part = packed_gemm_pspecs(config.shard_layout, axis, planes=True)
     a_p = _pad_axis(a_planes, 2, ns)
     b_p = _pad_axis(b_planes, 2, ns)
+    if config.overlap_collective:
+        # ring-overlap variant (see _ring_chunk_reduce); bit-identical
+        nc = _round_up(n, ns) // ns
+        b_p = _pad_axis(b_p, 1, ns)
+        t = config.tiles(m, nc, a_p.shape[-1] // ns, backend=inner)
+
+        def body_ring(a_loc, b_loc):
+            def chunk(c):
+                b_c = jax.lax.dynamic_slice_in_dim(b_loc, c * nc, nc,
+                                                   axis=1)
+                return kernel(a_loc, b_c, t, config)
+
+            return _ring_chunk_reduce(chunk, axis=part.reduce_axis, ns=ns,
+                                      nc=nc)
+
+        s = shard_map(body_ring, mesh=mesh, in_specs=(part.a, part.w),
+                      out_specs=part.out, check_vma=False)(a_p, b_p)
+        return s[:, :n]
     t = config.tiles(m, n, a_p.shape[-1] // ns, backend=inner)
 
     def body_k(a_loc, b_loc):
@@ -1228,6 +1298,25 @@ def _shard_kbit_gemm_grouped(family, buckets, w_stack, tiles, config):
                               planes=True, grouped=True)
     b_p = _pad_axis(_pad_axis(buckets, 0, es), 3, ns)
     w_p = _pad_axis(_pad_axis(w_stack, 0, es), 3, ns)
+    if config.overlap_collective:
+        # ring-overlap variant inside each expert-axis group (see
+        # _ring_chunk_reduce); bit-identical
+        nc = _round_up(n, ns) // ns
+        w_p = _pad_axis(w_p, 2, ns)
+        t = config.tiles(ec, nc, b_p.shape[-1] // ns,
+                         backend=f"{family}-k{kb}")
+
+        def body_ring(b_loc, wl):
+            def chunk(c):
+                w_c = jax.lax.dynamic_slice_in_dim(wl, c * nc, nc, axis=2)
+                return kernel(b_loc, w_c, t, config)
+
+            return _ring_chunk_reduce(chunk, axis=part.reduce_axis, ns=ns,
+                                      nc=nc)
+
+        s = shard_map(body_ring, mesh=mesh, in_specs=(part.a, part.w),
+                      out_specs=part.out, check_vma=False)(b_p, w_p)
+        return s[..., :n][:e]
     t = config.tiles(ec, n, b_p.shape[-1] // ns, backend=f"{family}-k{kb}")
 
     def body(b_loc, wl):
@@ -1265,21 +1354,23 @@ def _pad_k_float(x: jax.Array, k_pad: int) -> jax.Array:
     return jnp.pad(x, widths, constant_values=-1.0)  # bit 0 / code 0
 
 
-def _ring_chunk_reduce(compute_chunk, *, axis, ns, m, nc):
+def _ring_chunk_reduce(compute_chunk, *, axis, ns, nc):
     """``collective_matmul``-style ring reduce-scatter of N-chunked raw
     int32 partials (``GemmConfig.overlap_collective``).
 
-    ``compute_chunk(c) -> (m, nc) int32`` is this shard's raw partial
-    (over its local Kw slab) for output-column chunk ``c``; must be called
-    inside a shard_map body over ``axis`` with ``ns`` shards.  Instead of
-    one monolithic ``psum`` of the full (m, ns*nc) partial — a barrier no
-    compute hides behind — each shard walks the ring: compute one chunk's
-    partial, add it to the accumulator arriving from the ring predecessor,
-    ``ppermute`` onward, and start the NEXT chunk's GEMM while the hop is
-    in flight.  After ns-1 hops shard ``i`` owns the fully-reduced chunk
-    ``i``; a final ``all_gather`` rebuilds the replicated (m, ns*nc) S.
-    The chunk schedule (shard ``i`` computes chunk ``i + ns - 1 - t`` at
-    step ``t``) is exactly the reduce-scatter matmul of Wang et al.'s
+    ``compute_chunk(c) -> (..., nc) int32`` is this shard's raw partial
+    (over its local Kw slab) for output-column chunk ``c`` — any leading
+    dims (the dense paths produce ``(m, nc)``, the grouped paths
+    ``(e, ec, nc)``); must be called inside a shard_map body over
+    ``axis`` with ``ns`` shards.  Instead of one monolithic ``psum`` of
+    the full (..., ns*nc) partial — a barrier no compute hides behind —
+    each shard walks the ring: compute one chunk's partial, add it to the
+    accumulator arriving from the ring predecessor, ``ppermute`` onward,
+    and start the NEXT chunk's GEMM while the hop is in flight.  After
+    ns-1 hops shard ``i`` owns the fully-reduced chunk ``i``; a final
+    ``all_gather`` rebuilds the replicated (..., ns*nc) S.  The chunk
+    schedule (shard ``i`` computes chunk ``i + ns - 1 - t`` at step
+    ``t``) is exactly the reduce-scatter matmul of Wang et al.'s
     collective-matmul decomposition, applied to the raw integer partials.
 
     Because every partial is int32 and integer addition is exact in any
@@ -1294,8 +1385,9 @@ def _ring_chunk_reduce(compute_chunk, *, axis, ns, m, nc):
     for t in range(1, ns):
         acc = jax.lax.ppermute(acc, axis, perm)
         acc = acc + compute_chunk((idx + ns - 1 - t) % ns)
-    gathered = jax.lax.all_gather(acc, axis, axis=0)  # (ns, m, nc)
-    return jnp.moveaxis(gathered, 0, 1).reshape(m, ns * nc)
+    gathered = jax.lax.all_gather(acc, axis, axis=0)  # (ns, ..., nc)
+    gathered = jnp.moveaxis(gathered, 0, -2)          # (..., ns, nc)
+    return gathered.reshape(*gathered.shape[:-2], ns * nc)
 
 
 def _shard_from_float(inner, x2, w_packed, k_true, config):
@@ -1332,7 +1424,7 @@ def _shard_from_float(inner, x2, w_packed, k_true, config):
                 return _mxu_raw(ap, b_c, t, interp)[0]
 
             return _ring_chunk_reduce(chunk, axis=part.reduce_axis, ns=ns,
-                                      m=m, nc=nc)
+                                      nc=nc)
 
         raw = shard_map(body_ring, mesh=mesh, in_specs=(part.a, part.w),
                         out_specs=part.out, check_vma=False)(x_p, w_p)
@@ -1405,7 +1497,7 @@ def _shard_kbit_from_float(family, x2, w_planes, a_bits, w_bits, k_true,
                 return kernel(planes_loc, b_c, t, config)
 
             s_loc = _ring_chunk_reduce(chunk, axis=part.reduce_axis,
-                                       ns=ns, m=m, nc=nc)
+                                       ns=ns, nc=nc)
             return s_loc, jax.lax.psum(t_loc, part.reduce_axis)
 
         s, t_sum = shard_map(body_ring, mesh=mesh,

@@ -57,6 +57,27 @@ def add_gemm_flags(ap: argparse.ArgumentParser, *names: str,
                          "rows drop and are never quantized or packed")
 
 
+def add_spec_flags(ap: argparse.ArgumentParser) -> None:
+    """The speculative-decoding flag block (serve-only).  ``--draft``
+    derives a depth-sliced draft model from the loaded float checkpoint
+    via ``converter.derive_draft`` — ``w1a1`` binarizes it through the
+    packed-GEMM path (the paper's 1-bit deployment mode as the cheap
+    proposer), ``fp`` keeps it float (a debugging oracle).  Greedy output
+    is token-identical to non-speculative serving either way."""
+    ap.add_argument("--draft", default=None, choices=["w1a1", "fp"],
+                    help="enable speculative decoding with a depth-sliced "
+                         "draft: 'w1a1' binarizes the slice (1-bit packed "
+                         "GEMMs), 'fp' keeps it float; greedy outputs stay "
+                         "token-identical to non-speculative serving")
+    ap.add_argument("--spec-len", type=int, default=2,
+                    help="proposed tokens per speculative round (the "
+                         "target verifies spec_len + 1 positions in one "
+                         "windowed call)")
+    ap.add_argument("--draft-layers", type=int, default=None,
+                    help="leading layers kept in the draft slice "
+                         "(default: n_layers // 4, min 1)")
+
+
 def gemm_config_from_args(args: argparse.Namespace) -> GemmConfig:
     """A GemmConfig from the flags :func:`add_gemm_flags` installed."""
     return GemmConfig(backend=args.gemm_backend,

@@ -28,6 +28,13 @@ k-bit (DoReFa) packed serving uses the same flow with ``--quant w4a4`` /
 layer resolves ``--backend vpu`` onto the ``vpu-k4``/``vpu-k8`` plane
 kernels per layer (first/last stay fp per policy).
 
+``--draft w1a1 --spec-len s`` turns on speculative decoding: a
+depth-sliced, 1-bit-converted draft of the same checkpoint proposes ``s``
+tokens per round and the target verifies them in one windowed call
+(serve/engine.py docstring has the invariants).  Greedy outputs stay
+token-identical to non-speculative serving; the stats line reports the
+acceptance rate.  ``--draft fp`` keeps the slice float (debug oracle).
+
 Tensor-parallel packed serving: ``--backend shard-vpu --shard 4`` runs
 every packed GEMM under shard_map on a 4-way 'model' mesh (Kw-partial
 popcount + psum; bit-identical to single-device — see
@@ -36,6 +43,7 @@ kernels/dispatch.py), and k-bit layers resolve onto ``shard-vpu-k*``."""
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -49,7 +57,8 @@ from repro.models import lm as lm_model
 from repro.models import registry
 from repro.models import whisper as whisper_model
 from repro.nn.common import QCtx
-from repro.serve.engine import Engine, EngineConfig, Request, Scheduler
+from repro.serve.engine import (DraftModel, Engine, EngineConfig, Request,
+                                Scheduler)
 
 
 def load_packed(path: str, template):
@@ -101,6 +110,7 @@ def main() -> None:
                          "across identical-prefix requests (the request-"
                          "stream demo gives every prompt a common prefix "
                          "so the savings show up in the stats line)")
+    cli.add_spec_flags(ap)
     ap.add_argument("--request-stream", action="store_true",
                     help="continuous-batching demo mode: submit 2x "
                          "--prompts requests with mixed prompt lengths to "
@@ -126,6 +136,23 @@ def main() -> None:
     else:
         params = whisper_model.init(key, cfg)
 
+    draft = None
+    if args.draft:
+        # slice BEFORE any packed-checkpoint replacement: derive_draft
+        # binarizes float weights (a packed target can't be re-sliced)
+        if spec.family != "lm":
+            raise SystemExit("--draft: speculative serving is lm-only")
+        dpolicy = parse_quant("binary" if args.draft == "w1a1" else "fp")
+        dparams, dcfg, _ = converter.derive_draft(
+            jax.tree.map(np.asarray, params), cfg,
+            n_layers=args.draft_layers, policy=dpolicy,
+            keep_float=args.draft == "fp")
+        draft = DraftModel(cfg=dcfg,
+                           params=jax.tree.map(jnp.asarray, dparams),
+                           ctx=dataclasses.replace(ctx, policy=dpolicy))
+        print(f"speculative draft: {dcfg.n_layers}/{cfg.n_layers} layers "
+              f"({args.draft}), spec_len={args.spec_len}")
+
     if args.packed:
         tmpl, _ = converter.convert(jax.tree.map(np.asarray, params), policy)
         params = load_packed(args.packed, tmpl)
@@ -138,7 +165,8 @@ def main() -> None:
                         seed=args.seed,
                         kv_block_size=args.kv_block_size,
                         prefill_chunk=args.prefill_chunk,
-                        shared_prefix=args.shared_prefix)
+                        shared_prefix=args.shared_prefix,
+                        draft=draft, spec_len=args.spec_len)
     eng = Engine(spec, cfg, ctx, params, ecfg)
 
     rng = np.random.default_rng(args.seed)
@@ -187,6 +215,14 @@ def main() -> None:
             print(f"paged KV: {stats.prefill_tokens} prompt tokens "
                   f"prefilled, {stats.shared_tokens} reused from shared "
                   f"prefix blocks")
+        if eng.speculative:
+            print(f"speculative: {stats.spec_rounds} rounds, acceptance "
+                  f"{stats.acceptance_rate:.2f} ({stats.spec_accepted}/"
+                  f"{stats.spec_proposed} proposals accepted)")
+        tpots = stats.tpots()
+        if tpots:
+            p50, p95 = np.percentile(tpots, [50, 95]) * 1e3
+            print(f"per-token latency: p50 {p50:.1f}ms, p95 {p95:.1f}ms")
         for rid in sorted(results)[:4]:
             print(f"  rid={rid} ({len(results[rid])} tok): "
                   f"{results[rid][:10]}")
@@ -201,6 +237,11 @@ def main() -> None:
     dt = time.time() - t0
     print(f"generated {out.shape} tokens in {dt:.2f}s "
           f"({out.size / dt:.1f} tok/s)")
+    if eng.speculative:
+        st = eng.last_stats
+        print(f"speculative: {st.spec_rounds} rounds, acceptance "
+              f"{st.acceptance_rate:.2f} ({st.spec_accepted}/"
+              f"{st.spec_proposed} proposals accepted)")
     print(out[:, :12])
 
 

@@ -414,6 +414,26 @@ def cache_reset(cfg: LMConfig, cache: Params, slot: jax.Array,
     return {"layers": layers}
 
 
+def cache_truncate(cfg: LMConfig, cache: Params, lengths: jax.Array,
+                   kv: attn_lib.KVCache | None = None) -> Params:
+    """Per-row KV rollback for speculative decode: row ``b`` keeps its
+    first ``lengths[b]`` token positions, everything at ``pos >=
+    lengths[b]`` becomes invisible again (``kv.truncate`` per attention
+    layer).  Rows whose cache is already shorter are no-ops, so one
+    batchwide jitted call covers ragged accept lengths.  Pure-attention
+    stacks only — recurrent state has no per-position rollback story
+    (the same restriction as :func:`decode_window`)."""
+    kv = attn_lib.CONTIGUOUS if kv is None else kv
+    layers = []
+    for i, lc in enumerate(cache["layers"]):
+        if cfg.mixer_kind(i) != "attn":
+            raise ValueError(
+                f"cache_truncate supports pure-attention stacks; layer "
+                f"{i} is {cfg.mixer_kind(i)!r}")
+        layers.append({**lc, **kv.truncate(lc, lengths)})
+    return {"layers": layers}
+
+
 def decode_step(
     params: Params,
     cfg: LMConfig,
@@ -494,18 +514,24 @@ def decode_window(
     pos_start: jax.Array,  # (B,) absolute position of each row's first token
     kv: attn_lib.KVCache,
     write_mask: jax.Array | None = None,
+    logits_all: bool = False,
 ) -> tuple[jax.Array, Params]:
-    """A C-token window for every batch row against the (paged) cache:
-    the serving primitive behind chunked prefill AND paged decode (C == 1).
+    """A C-token window for every batch row against the cache: the
+    serving primitive behind chunked prefill, paged decode (C == 1), AND
+    the speculative verify pass (``logits_all=True``).
 
     Each row's tokens sit at positions ``pos_start[b] + [0..C)``; their
-    k/v are stored through ``kv.fill`` and attention runs over the full
-    gathered cache, so a chunk attends to everything already cached for
-    its slot (earlier chunks, refcounted shared-prefix blocks) plus
+    k/v are stored through ``kv.fill_window`` and attention runs over the
+    full gathered cache, so a chunk attends to everything already cached
+    for its slot (earlier chunks, refcounted shared-prefix blocks) plus
     itself.  Rows with ``write_mask=False`` (idle or decoding slots while
     another row prefills) compute junk and write nothing.  Pure-attention
     stacks only.  Returns LAST-position logits (B, 1, V) — the only ones
-    admission samples from — and the updated cache."""
+    admission samples from — and the updated cache; ``logits_all=True``
+    returns every position's logits (B, C, V) instead, which is how the
+    speculative target scores all C proposed continuations in ONE call
+    (logit row c conditions on window tokens <= c via the causal mask —
+    exactly the sequential decode distribution at each position)."""
     b, c = tokens.shape
     x = params["embed"]["table"].astype(ctx.compute_dtype)[tokens]
     if cfg.embed_scale:
@@ -539,7 +565,7 @@ def decode_window(
         x = x + h
         new_layers.append(lc)
 
-    logits = _logits(params, cfg, ctx, x[:, -1:, :])
+    logits = _logits(params, cfg, ctx, x if logits_all else x[:, -1:, :])
     return logits, {"layers": new_layers}
 
 

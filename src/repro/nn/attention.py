@@ -249,6 +249,14 @@ class KVCache:
       invisible to :func:`_mask`)
     * ``fill(cache, k, v, positions, write_mask=None)`` -> store projected
       k/v at absolute positions
+    * ``fill_window(cache, k, v, positions, write_mask=None)`` -> same
+      contract but positions are per-row windows ``pos_start[b] + [0..C)``
+      at ARBITRARY per-row starts (speculative verify / chunked prefill);
+      the paged scatter already handles that, the contiguous layout needs
+      a one-hot write instead of its arange-assuming prefill path
+    * ``truncate(cache, lengths)``        -> per-row rollback: rows of
+      slot ``b`` at positions ``>= lengths[b]`` become invisible to
+      :func:`_mask` again (speculative decode rejects a proposed suffix)
     * ``gather(cache)``                   -> ``(k, v, pos)`` dense views
       ``(B, L, KVH, Dh) x2 + (B, L)`` that attention consumes
 
@@ -269,6 +277,20 @@ class KVCache:
 
     def fill(self, cache: Params, k, v, positions,
              write_mask: jax.Array | None = None) -> Params:
+        raise NotImplementedError
+
+    def fill_window(self, cache: Params, k, v, positions,
+                    write_mask: jax.Array | None = None) -> Params:
+        """Window write at arbitrary per-row start positions.  The paged
+        scatter handles that natively; layouts whose ``fill`` assumes
+        aligned prefill positions override this."""
+        return self.fill(cache, k, v, positions, write_mask)
+
+    def truncate(self, cache: Params, lengths: jax.Array) -> Params:
+        """Roll row ``b`` back to ``lengths[b]`` tokens: positions
+        ``>= lengths[b]`` become invisible (and rewritable) again.  Rows
+        whose content is already shorter are untouched (no-op), so one
+        batchwide call serves ragged speculative accept lengths."""
         raise NotImplementedError
 
     def gather(self, cache: Params):
@@ -313,10 +335,12 @@ class ContiguousKVCache(KVCache):
     def fill(self, cache, k, v, positions, write_mask=None):
         """Write to the cache.  k/v: (B, S, KVH, Dh), positions: (B, S).
         Slots are ``pos % cache_len`` (ring for local layers; identity when
-        cache_len >= S).  ``write_mask`` is ignored: storage is slot-
-        private, so a junk write from a retired/prefilling batch row can
-        never leak into another request (admission's full-slot ``insert``
-        overwrite is the safety mechanism).
+        cache_len >= S).  ``write_mask=False`` rows skip the write on the
+        S == 1 path; the prefill paths ignore it — storage is slot-
+        private, so a junk write from a retired batch row can never leak
+        into another request (admission's full-slot ``insert`` overwrite
+        is the safety mechanism), the mask is only honored where the
+        speculative-decode loop needs idle rows' positions left alone.
 
         No scatters: scatter onto a model-sharded cache triggers GSPMD
         "involuntary full rematerialization" (the cache gets replicated —
@@ -327,13 +351,16 @@ class ContiguousKVCache(KVCache):
           elementwise, any sharding, SPMD-safe.
         * S > 1 (prefill): positions are the standard arange; the write is
           a dynamic-update-slice (cache_len >= S) or a roll of the last
-          cache_len tokens (ring wrap), both SPMD-friendly.
+          cache_len tokens (ring wrap), both SPMD-friendly.  Windows at
+          per-row starts go through :meth:`fill_window` instead.
         """
         cache_len = cache["k"].shape[1]
         s = k.shape[1]
         if s == 1:
             slots = positions % cache_len  # (B, 1)
             mask = jnp.arange(cache_len)[None, :] == slots  # (B, L)
+            if write_mask is not None:
+                mask &= write_mask[:, None]
             m4 = mask[:, :, None, None]
             return {
                 "k": jnp.where(m4, k.astype(cache["k"].dtype), cache["k"]),
@@ -364,6 +391,45 @@ class ContiguousKVCache(KVCache):
             "v": v_t.astype(cache["v"].dtype),
             "slot_pos": p_t,
         }
+
+    def fill_window(self, cache, k, v, positions, write_mask=None):
+        """C-token window write at per-row start positions (speculative
+        verify, draft restart windows).  One-hot select per window token —
+        the same SPMD-safe no-scatter trick as the S == 1 decode path,
+        vectorized over C: window token c of row b lands in slot
+        ``positions[b, c] % cache_len``.  Within a row the window
+        positions are consecutive, so the per-token one-hots never
+        collide and the 0/1-coefficient einsum below reproduces a direct
+        write bit-exactly."""
+        cache_len = cache["k"].shape[1]
+        if k.shape[1] == 1:
+            return self.fill(cache, k, v, positions, write_mask)
+        slots = positions % cache_len  # (B, C)
+        oh = slots[:, :, None] == jnp.arange(cache_len)[None, None, :]
+        if write_mask is not None:
+            oh &= write_mask[:, None, None]
+        hit = oh.any(axis=1)  # (B, L): does any window token land here?
+        ohk = oh.astype(cache["k"].dtype)
+        upd_k = jnp.einsum("bcl,bchd->blhd", ohk,
+                           k.astype(cache["k"].dtype))
+        upd_v = jnp.einsum("bcl,bchd->blhd", ohk,
+                           v.astype(cache["v"].dtype))
+        upd_p = (oh * positions[:, :, None]).sum(axis=1)
+        h4 = hit[:, :, None, None]
+        return {
+            "k": jnp.where(h4, upd_k, cache["k"]),
+            "v": jnp.where(h4, upd_v, cache["v"]),
+            "slot_pos": jnp.where(hit, upd_p, cache["slot_pos"]),
+        }
+
+    def truncate(self, cache, lengths):
+        """Rows at positions >= lengths[b] flip to ``slot_pos = -1``:
+        invisible to :func:`_mask` and rewritten in place by the next
+        window (overwrite-before-read, exactly like slot recycling).  K/V
+        bytes stay — same hygiene argument as :meth:`reset`."""
+        slot_pos = cache["slot_pos"]
+        return {**cache, "slot_pos": jnp.where(
+            slot_pos >= lengths[:, None], -1, slot_pos)}
 
     def gather(self, cache):
         return cache["k"], cache["v"], cache["slot_pos"]
@@ -489,6 +555,37 @@ class PagedKVCache(KVCache):
             .reshape(cache["pool_pos"].shape),
         }
 
+    def truncate(self, cache, lengths):
+        """Rollback through the table: every mapped pool row of slot ``b``
+        holding a position >= ``lengths[b]`` flips to ``pool_pos = -1`` —
+        invisible to :func:`_mask` and rewritable by the next window
+        (the speculative verify overwrites the rolled-back range before
+        reading it, exactly as decode overwrites a fresh block).
+
+        Safe under sharing: a shared-prefix block's positions are all
+        ``< prompt_len <= lengths[b]`` for every holder, so its scattered
+        values are unchanged (holders write back identical bytes) — only
+        the truncating slot's PRIVATE tail blocks actually flip.  Block
+        *ownership* is untouched; the host allocator keeps its refcounts
+        (the engine maps a slot's full table at admission, so rollback is
+        a visibility change, not a deallocation — tail blocks drain back
+        to the allocator at retirement via ``BlockAllocator.trim``)."""
+        table = cache["table"]  # (B, bps)
+        b, bps = table.shape
+        bs = self.block_size
+        nb = cache["pool_pos"].shape[0]
+        safe = jnp.clip(table, 0)
+        pos = cache["pool_pos"][safe]  # (B, bps, bs)
+        newpos = jnp.where(pos >= lengths[:, None, None], -1, pos)
+        # scatter back through the table; unmapped rows (-1) -> index
+        # nb*bs, dropped
+        blk = jnp.where(table >= 0, safe, nb)[:, :, None]
+        flat = (blk * bs + jnp.arange(bs)[None, None, :]).reshape(-1)
+        pool_pos = (cache["pool_pos"].reshape(nb * bs)
+                    .at[flat].set(newpos.reshape(-1), mode="drop")
+                    .reshape(nb, bs))
+        return {**cache, "pool_pos": pool_pos}
+
     def gather(self, cache):
         """Dense (B, L, KVH, Dh) views via the table — position order, so
         the result matches the contiguous layout's storage bit-for-bit.
@@ -569,10 +666,11 @@ def attn_window(
     special case; chunked prefill is the general one, where each chunk of
     a long prompt attends to everything already cached (earlier chunks,
     shared prefix blocks) plus itself, so one jitted shape serves decode,
-    chunked prefill, and shared-prefix suffix prefill."""
+    chunked prefill, shared-prefix suffix prefill, and the speculative
+    verify window (per-row starts — hence ``fill_window``)."""
     b, c, _ = x.shape
     q, k_new, v_new = _project_qkv(params, x, positions, cfg, ctx, path)
-    cache = kv.fill(cache, k_new, v_new, positions, write_mask)
+    cache = kv.fill_window(cache, k_new, v_new, positions, write_mask)
     qg = q.reshape(b, c, cfg.n_kv_heads, cfg.groups, cfg.d_head)
     k, v, k_pos = kv.gather(cache)
     mask = _mask(cfg, positions, k_pos)  # (B, C, L)

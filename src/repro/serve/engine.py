@@ -95,6 +95,54 @@ Tensor-parallel serving: configure a ``shard-*`` backend (e.g.
 ``shard_map`` with the packed K dimension partitioned across devices —
 bit-identical logits to the single-device engine (the Kw-partial popcount
 psums exactly; see kernels/dispatch.py).
+
+**Speculative decoding** (``EngineConfig.draft`` + ``spec_len``): a second,
+cheap model — typically the target's leading layers binarized to the w1a1
+xnor tier (``core/converter.derive_draft``), running the packed ``vpu``
+path — proposes ``spec_len`` greedy tokens per round per decode-phase
+slot, and the target scores ALL proposed positions in ONE
+``models/lm.decode_window(..., logits_all=True)`` call instead of
+``spec_len`` sequential decode steps.  Per row, the accepted run length is
+``n = |leading matches between proposals and the target's own greedy
+picks|`` and the row emits ``n + 1`` tokens (the target's pick after the
+last accepted proposal rides along free), so useful tokens per target call
+scale with the draft's acceptance rate.  Draft/target KV invariants:
+
+* **lossless by construction** — every emitted token is the target's own
+  greedy argmax given the previously emitted prefix: logit row ``c`` of
+  the verify window conditions exactly on window tokens ``< c`` (causal
+  mask over the gathered cache), so the emitted stream is token-identical
+  to target-only greedy decode for ANY draft — the draft only sets the
+  acceptance rate, never the output (CI gates this equivalence).
+* **rollback** — the verify window writes positions ``p..p+s`` into the
+  target cache and the draft wrote ``p..p+s-1`` into its own; when a row
+  accepts only ``n < s`` proposals, ONE shared per-row ``lengths = p+n+1``
+  rolls BOTH caches back (``KVCache.truncate``: contiguous flips
+  ``slot_pos`` to -1, paged flips ``pool_pos`` through the block table —
+  ownership stays with the allocator, tail blocks drain back via
+  ``BlockAllocator.trim`` at retirement).  Rolled-back rows are
+  overwritten by the next round's window before they are read, the same
+  overwrite-before-read discipline slot recycling relies on.
+* **draft restart window** — each round the draft starts with a width-2
+  window ``[t_{p-1}, t_p]`` at positions ``(p-1, p)``: re-feeding the
+  previous token is a bit-identical overwrite when the position is
+  already cached, and it is exactly what writes the one position the
+  draft never saw when the previous round accepted everything (its own
+  last proposal) — one uniform shape for every acceptance outcome,
+  including the first round after prefill.
+* **write-masks** — rows not in decode phase (idle, prefilling, retired)
+  ride through the shape-static draft/verify calls with
+  ``write_mask=False``: the paged pool drops their junk writes (recycled
+  blocks!), the contiguous layouts leave their rows untouched, and their
+  per-row ``lengths`` are pinned past every live position so the
+  batchwide truncate never touches them (a retired slot's blocks may be
+  SHARED — truncating them would corrupt the surviving holder).
+
+Greedy-only (temperature 0 — acceptance of sampled tokens needs the
+rejection-sampling correction, out of scope), lm family, pure-attention
+stacks (``decode_window``/``cache_truncate`` restriction).  The draft
+always keeps its own CONTIGUOUS cache, even under a paged target — it is
+slot-private scratch state, block sharing buys nothing there.
 """
 
 from __future__ import annotations
@@ -157,6 +205,23 @@ def resolve_sampling(req: "Request", ecfg: "EngineConfig") -> SamplingParams:
 
 
 @dataclasses.dataclass
+class DraftModel:
+    """The speculative draft: a second LM sharing the scheduler's slot
+    machinery through its own contiguous KV cache.  The intended pairing
+    is ``core/converter.derive_draft`` — the target's leading layers
+    bit-packed to the w1a1 xnor tier — but ANY lm-family pure-attention
+    model with the target's vocabulary works (greedy spec output is
+    token-identical to the target regardless; the draft only sets the
+    acceptance rate).  ``ctx`` carries the draft's OWN quant policy and
+    GemmConfig (e.g. the packed ``vpu`` backend), independent of the
+    target's."""
+
+    cfg: Any  # the draft's LMConfig
+    params: Params  # packed (or float) draft weights
+    ctx: QCtx
+
+
+@dataclasses.dataclass
 class EngineConfig:
     batch: int  # KV-cache slots == the shape-static decode width
     cache_len: int
@@ -192,6 +257,15 @@ class EngineConfig:
     gemm_config: GemmConfig | None = None
     # per-engine mesh override for shard-* backends / EP MoE layers
     mesh: Any = None
+    # speculative decoding: a DraftModel proposes `spec_len` greedy tokens
+    # per round per decode-phase slot; the target verifies them all in one
+    # decode_window call and the scheduler emits the accepted run plus the
+    # target's next pick — token-identical to target-only greedy decode
+    # (module docstring has the KV invariants).  Greedy-only, lm family,
+    # pure-attention stacks; cache_len must cover prompt + budget +
+    # spec_len per request (checked at admission).
+    draft: DraftModel | None = None
+    spec_len: int = 2  # proposals per round (used when draft is set)
 
 
 @dataclasses.dataclass
@@ -237,13 +311,37 @@ class SlotState:
 
 @dataclasses.dataclass
 class SchedulerStats:
-    steps: int = 0  # jitted decode steps executed
+    steps: int = 0  # jitted decode/verify steps executed
     prefills: int = 0  # jitted prefill (admission/chunk) calls
     prefill_tokens: int = 0  # prompt tokens actually prefilled (paged)
     shared_tokens: int = 0  # prompt tokens skipped via prefix sharing
     admissions: list = dataclasses.field(default_factory=list)  # (rid, slot)
     t_first: dict = dataclasses.field(default_factory=dict)  # rid -> s
     t_done: dict = dataclasses.field(default_factory=dict)  # rid -> s
+    # per-request emission timestamps (rid -> [s], one per emitted token,
+    # relative to run start).  TTFT = first entry; TPOT = the diffs — in
+    # spec mode an accepted run lands in one burst, so the TPOT
+    # distribution is exactly what speculative decoding reshapes.
+    t_tokens: dict = dataclasses.field(default_factory=dict)
+    # speculative-mode counters (zero when no draft is configured)
+    spec_rounds: int = 0  # per-slot verify outcomes scored
+    spec_proposed: int = 0  # draft tokens proposed (spec_len * rounds)
+    spec_accepted: int = 0  # draft tokens the target agreed with
+
+    def ttfts(self) -> list:
+        """Per-request time-to-first-token (seconds, run-relative)."""
+        return [v[0] for v in self.t_tokens.values() if v]
+
+    def tpots(self) -> list:
+        """Per-token inter-emission gaps (seconds), pooled over requests
+        — the per-token latency distribution p50/p95 is quoted from."""
+        return [b - a for v in self.t_tokens.values()
+                for a, b in zip(v, v[1:])]
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of draft proposals the target accepted."""
+        return self.spec_accepted / max(self.spec_proposed, 1)
 
 
 class BlockAllocator:
@@ -314,6 +412,17 @@ class BlockAllocator:
             self.cached[blk] = None
         else:
             self.free.append(blk)
+
+    def trim(self, blocks: list[int], keep: int) -> list[int]:
+        """Release the tail of a slot's held-block list — one reference
+        drop per tail block (the LAST holder frees, or caches registered
+        prefix blocks).  Returns the kept prefix; the caller MUST adopt
+        it as its new held list, which is what makes a second trim/release
+        of the same tail a loud ``release`` error instead of silent
+        corruption.  ``keep=0`` is full retirement."""
+        for blk in blocks[keep:]:
+            self.release(blk)
+        return blocks[:keep]
 
     @property
     def live_blocks(self) -> int:
@@ -410,6 +519,89 @@ class Engine:
             lambda cache, sub, slots: mod.cache_insert(cache, sub, slots, kv))
         self._reset = jax.jit(_reset)
 
+        if ecfg.draft is not None:
+            self._init_spec(ecfg.draft)
+
+    def _init_spec(self, draft: DraftModel) -> None:
+        """Validate the speculative configuration and build the verify /
+        rollback / draft entry points (module docstring: invariants)."""
+        cfg, ctx, ecfg, kv = self.cfg, self.ctx, self.ecfg, self.kv
+        if self.spec.family != "lm":
+            raise ValueError(
+                "speculative decoding supports the lm family only")
+        if ecfg.spec_len < 1:
+            raise ValueError(f"spec_len must be >= 1, got {ecfg.spec_len}")
+        if getattr(cfg, "vision_prefix", 0):
+            raise ValueError(
+                "speculative decoding does not support a vision prefix")
+        t = ecfg.temperature if ecfg.sampling is None \
+            else (ecfg.sampling.temperature
+                  if ecfg.sampling.temperature is not None
+                  else ecfg.temperature)
+        if t and t > 0:
+            raise ValueError(
+                "speculative decoding is greedy-only (temperature 0): "
+                "accepting sampled proposals needs the rejection-sampling "
+                "correction, which this engine does not implement")
+        for label, c in (("target", cfg), ("draft", draft.cfg)):
+            bad = [k for k in c.mixer_pattern if k != "attn"]
+            if bad:
+                raise ValueError(
+                    f"speculative decoding needs a pure-'attn' mixer "
+                    f"stack; {label} pattern has {bad}")
+        dcfg, dctx = draft.cfg, draft.ctx
+        self.dparams = draft.params
+        self.dcfg, self.dctx = dcfg, dctx
+        dkv = attn_lib.CONTIGUOUS  # draft cache is slot-private scratch
+
+        def _verify(params, cache, tokens, pos_start, write_mask):
+            return lm_model.decode_window(
+                params, cfg, ctx, cache, tokens, pos_start, kv,
+                write_mask=write_mask, logits_all=True)
+
+        def _truncate(cache, lengths):
+            return lm_model.cache_truncate(cfg, cache, lengths, kv)
+
+        def _d_prefill(dp, tokens):
+            return lm_model.prefill(dp, dcfg, dctx, tokens,
+                                    cache_len=ecfg.cache_len)
+
+        def _d_window(dp, dcache, tokens, pos_start, write_mask):
+            return lm_model.decode_window(dp, dcfg, dctx, dcache, tokens,
+                                          pos_start, dkv,
+                                          write_mask=write_mask)
+
+        def _d_step(dp, dcache, tokens, pos, write_mask):
+            return lm_model.decode_step(dp, dcfg, dctx, dcache, tokens,
+                                        pos, kv=dkv, write_mask=write_mask)
+
+        def _d_truncate(dcache, lengths):
+            return lm_model.cache_truncate(dcfg, dcache, lengths, dkv)
+
+        def _d_reset(dcache, slot):
+            return lm_model.cache_reset(dcfg, dcache, slot, dkv)
+
+        self._verify = jax.jit(_verify)
+        self._truncate = jax.jit(_truncate)
+        self._d_prefill = jax.jit(_d_prefill)
+        self._d_insert = jax.jit(
+            lambda c, sub, slots: lm_model.cache_insert(c, sub, slots, dkv))
+        self._d_window = jax.jit(_d_window)
+        self._d_step = jax.jit(_d_step)
+        self._d_truncate = jax.jit(_d_truncate)
+        self._d_reset = jax.jit(_d_reset)
+
+    def d_init_cache(self) -> Params:
+        """A fresh all-slots-empty DRAFT cache (always contiguous)."""
+        return lm_model.init_cache(self.dcfg, self.ecfg.batch,
+                                   self.ecfg.cache_len,
+                                   self.dctx.compute_dtype,
+                                   kv=attn_lib.CONTIGUOUS)
+
+    @property
+    def speculative(self) -> bool:
+        return self.ecfg.draft is not None
+
     @property
     def paged(self) -> bool:
         return isinstance(self.kv, attn_lib.PagedKVCache)
@@ -491,13 +683,23 @@ class Scheduler:
     paged engine the loop swaps grouped prefill for per-request chunked
     prefill + prefix sharing (module docstring has the invariants)."""
 
+    # per-row `lengths` sentinel for rows the batchwide truncate must not
+    # touch (idle / prefilling / just-retired rows — a retired slot's
+    # blocks may be shared, so truncating them would corrupt the holder)
+    NO_TRUNC = 1 << 30
+
     def __init__(self, engine: Engine):
         self.eng = engine
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[SlotState | None] = [None] * engine.ecfg.batch
         self.stats = SchedulerStats()
+        self.last_stats = self.stats  # refreshed (same object) by run()
         self._results: dict[int, np.ndarray] = {}
         self._next_rid = 0
+        # spec mode: token at pos-1 per slot (the draft restart window
+        # re-feeds it) and the draft's own contiguous cache
+        self._prev = np.zeros((engine.ecfg.batch,), np.int32)
+        self._dcache: Params | None = None
         if engine.paged:
             bs = engine.kv.block_size
             self.bps = engine.ecfg.cache_len // bs
@@ -529,8 +731,10 @@ class Scheduler:
     def _emit(self, i: int, st: SlotState, token: int) -> bool:
         """Record one emitted token; retire the slot on eos / budget
         exhaustion.  Returns True when the slot retired."""
+        now = self._now()
         if not st.tokens:
-            self.stats.t_first[st.rid] = self._now()
+            self.stats.t_first[st.rid] = now
+        self.stats.t_tokens.setdefault(st.rid, []).append(now)
         st.tokens.append(token)
         st.budget -= 1
         if st.budget <= 0 or (st.eos_id is not None and token == st.eos_id
@@ -560,6 +764,19 @@ class Scheduler:
 
     def _new_state(self, r: Request) -> SlotState:
         sp = resolve_sampling(r, self.eng.ecfg)
+        ecfg = self.eng.ecfg
+        if self.eng.speculative:
+            if sp.temperature and sp.temperature > 0:
+                raise ValueError(
+                    f"rid {r.rid}: speculative decoding is greedy-only "
+                    f"(got temperature {sp.temperature})")
+            need = len(r.prompt) + sp.max_new_tokens + ecfg.spec_len
+            if need > ecfg.cache_len:
+                raise ValueError(
+                    f"rid {r.rid}: cache_len {ecfg.cache_len} < prompt "
+                    f"({len(r.prompt)}) + budget ({sp.max_new_tokens}) + "
+                    f"spec_len ({ecfg.spec_len}) — the verify window "
+                    f"would write past the cache")
         return SlotState(
             rid=r.rid, prompt_len=len(r.prompt), budget=sp.max_new_tokens,
             eos_id=sp.eos_id, min_tokens=sp.min_tokens,
@@ -590,13 +807,21 @@ class Scheduler:
                 )
                 for k in group[0].prefill_kwargs
             }
+            states = [self._new_state(r) for r in group]
             logits, sub_cache = eng._prefill(
                 eng.params, jnp.asarray(prompts, jnp.int32), **kw)
             self.stats.prefills += 1
-            states = [self._new_state(r) for r in group]
             first = self._sample_for(logits, states)
             cache = eng._insert(cache, sub_cache,
                                 jnp.asarray(taken, jnp.int32))
+            if eng.speculative:
+                # the draft prefills the same grouped prompts into the
+                # same slots of its OWN cache (its first proposal comes
+                # from the next round's restart window, not from here)
+                _, d_sub = eng._d_prefill(eng.dparams,
+                                          jnp.asarray(prompts, jnp.int32))
+                self._dcache = eng._d_insert(self._dcache, d_sub,
+                                             jnp.asarray(taken, jnp.int32))
             start_pos = prompts.shape[1] + eng.pos_offset
             for g, i in enumerate(taken):
                 st = states[g]
@@ -610,6 +835,7 @@ class Scheduler:
                 else:
                     tok[i] = first[g]
                     pos[i] = start_pos
+                    self._prev[i] = prompts[g, -1]
         return cache, tok, pos
 
     def run(self) -> dict[int, np.ndarray]:
@@ -618,6 +844,8 @@ class Scheduler:
         eng, ecfg = self.eng, self.eng.ecfg
         self._t0 = time.perf_counter()
         cache = eng.init_cache()
+        if eng.speculative:
+            self._dcache = eng.d_init_cache()
         b = ecfg.batch
         tok = np.zeros((b,), np.int32)
         pos = np.zeros((b,), np.int32)
@@ -627,6 +855,9 @@ class Scheduler:
             active = np.array([s is not None for s in self.slots])
             if not active.any():
                 continue  # everything admitted retired on its first token
+            if eng.speculative:
+                cache, tok, pos = self._spec_round(cache, tok, pos, active)
+                continue
             logits, cache = eng._decode(
                 eng.params, cache, jnp.asarray(tok)[:, None],
                 jnp.asarray(pos))
@@ -639,16 +870,96 @@ class Scheduler:
                 st = self.slots[i]
                 if st is not None and self._emit(i, st, int(sampled[i])):
                     cache = eng._reset(cache, jnp.int32(i))
+        self.last_stats = self.stats
         return self._results
+
+    # -- speculative rounds (shared by both cache layouts) ------------------
+
+    def _spec_round(self, cache, tok, pos, dec):
+        """One speculative round for every decode-phase row (``dec``).
+
+        Draft: a width-2 restart window ``[prev, tok]`` at ``(pos-1,
+        pos)`` (re-sync + first proposal), then ``spec_len - 1`` single
+        steps.  Target: ONE ``logits_all`` verify window over ``[tok,
+        d_1..d_s]``.  Per row the leading-match run against the target's
+        own greedy picks is accepted and ``n + 1`` tokens emit; both
+        caches roll back to the shared per-row ``lengths = pos + n + 1``
+        (a no-op for fully-accepting rows, and skipped entirely when NO
+        row rolled back).  Module docstring: the KV invariants."""
+        eng, ecfg = self.eng, self.eng.ecfg
+        b, s_len = ecfg.batch, ecfg.spec_len
+        dm = jnp.asarray(dec)
+
+        props = np.zeros((b, s_len), np.int32)
+        d_logits, self._dcache = eng._d_window(
+            eng.dparams, self._dcache,
+            jnp.asarray(np.stack([self._prev, tok], axis=1)),
+            jnp.asarray(pos - 1), dm)
+        cur = np.asarray(eng._sample(d_logits, None, None, dm))
+        props[:, 0] = cur
+        dpos = pos + 1
+        for j in range(1, s_len):
+            d_logits, self._dcache = eng._d_step(
+                eng.dparams, self._dcache, jnp.asarray(cur)[:, None],
+                jnp.asarray(dpos), dm)
+            cur = np.asarray(eng._sample(d_logits, None, None, dm))
+            props[:, j] = cur
+            dpos = dpos + 1
+
+        win = np.concatenate([tok[:, None], props], axis=1)  # (B, s+1)
+        logits, cache = eng._verify(eng.params, cache, jnp.asarray(win),
+                                    jnp.asarray(pos), dm)
+        self.stats.steps += 1
+        greedy = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+
+        lengths = np.full((b,), self.NO_TRUNC, np.int32)
+        rolled = False
+        retired: list[tuple[int, SlotState]] = []
+        for i in range(b):
+            st = self.slots[i]
+            if not dec[i] or st is None:
+                continue
+            n = 0
+            while n < s_len and props[i, n] == greedy[i, n]:
+                n += 1
+            self.stats.spec_rounds += 1
+            self.stats.spec_proposed += s_len
+            self.stats.spec_accepted += n
+            done = False
+            for j in range(n + 1):  # the target's pick rides along free
+                if self._emit(i, st, int(greedy[i, j])):
+                    done = True
+                    break
+            if done:
+                retired.append((i, st))
+                rolled = True  # the slot's window tail must not survive
+            else:
+                self._prev[i] = props[i, n - 1] if n > 0 else tok[i]
+                tok[i] = greedy[i, n]
+                pos[i] = pos[i] + n + 1
+                lengths[i] = pos[i]
+                rolled = rolled or n < s_len
+        if rolled:
+            # one shared per-row rollback serves both models: the target
+            # wrote pos..pos+s, the draft pos..pos+s-1; fully-accepting
+            # rows carry lengths past their content (no-op)
+            ln = jnp.asarray(lengths)
+            cache = eng._truncate(cache, ln)
+            self._dcache = eng._d_truncate(self._dcache, ln)
+        for i, st in retired:
+            if eng.paged:
+                cache = self._release_slot(cache, i, st)
+            else:
+                cache = eng._reset(cache, jnp.int32(i))
+            self._dcache = eng._d_reset(self._dcache, jnp.int32(i))
+        return cache, tok, pos
 
     # -- paged path --------------------------------------------------------
 
     def _release_slot(self, cache, i: int, st: SlotState):
         """Retirement bookkeeping: drop every held block reference exactly
         once, then unmap the slot's table row."""
-        for blk in st.blocks:
-            self.alloc.release(blk)
-        st.blocks = []
+        st.blocks = self.alloc.trim(st.blocks, 0)
         return self.eng._reset(cache, jnp.int32(i))
 
     def _admit_paged(self, cache):
@@ -748,6 +1059,14 @@ class Scheduler:
                 for j in range(st.n_shared, len(st.block_hashes)):
                     self.alloc.register(st.blocks[j], st.block_hashes[j])
             st.phase = "decode"
+            if eng.speculative:
+                # the draft keeps its own (contiguous) prefill of the full
+                # prompt; the width-2 restart window re-syncs it each round
+                _, d_sub = eng._d_prefill(
+                    eng.dparams, jnp.asarray(st.prompt[None], jnp.int32))
+                self._dcache = eng._d_insert(
+                    self._dcache, d_sub, jnp.asarray([i], jnp.int32))
+                self._prev[i] = int(st.prompt[-1])
             st.prompt = None  # the cache holds it now
             if self._emit(i, st, int(first[i])):
                 cache = self._release_slot(cache, i, st)
@@ -760,6 +1079,8 @@ class Scheduler:
         eng, ecfg = self.eng, self.eng.ecfg
         self._t0 = time.perf_counter()
         cache = eng.init_cache()
+        if eng.speculative:
+            self._dcache = eng.d_init_cache()
         b = ecfg.batch
         tok = np.zeros((b,), np.int32)
         pos = np.zeros((b,), np.int32)
@@ -776,6 +1097,9 @@ class Scheduler:
                             for s in self.slots])
             if not dec.any():
                 continue  # all slots still prefilling (or just drained)
+            if eng.speculative:
+                cache, tok, pos = self._spec_round(cache, tok, pos, dec)
+                continue
             logits, cache = eng._decode(
                 eng.params, cache, jnp.asarray(tok)[:, None],
                 jnp.asarray(pos), jnp.asarray(dec))
@@ -790,6 +1114,7 @@ class Scheduler:
                 if (st is not None and st.phase == "decode"
                         and self._emit(i, st, int(sampled[i]))):
                     cache = self._release_slot(cache, i, st)
+        self.last_stats = self.stats
         return self._results
 
 

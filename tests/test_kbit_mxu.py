@@ -269,6 +269,60 @@ def test_overlap_collective_default_off():
     assert GemmConfig().overlap_collective is False
 
 
+@pytest.mark.parametrize("family", ["vpu", "mxu"])
+def test_overlap_collective_packed_operand_bit_identity(mesh_factory,
+                                                        family):
+    """The packed-operand entry points (packed_gemm / packed_kbit_gemm)
+    ride the same ring now — raw int32 partials, exact in any order."""
+    mesh = mesh_factory(4)
+    m, k, n = 6, 100, 9
+    rng = np.random.default_rng(5)
+    ap = bitpack.pack_sign(jnp.asarray(
+        np.sign(rng.standard_normal((m, k))), jnp.float32))
+    wp = bitpack.pack_sign(jnp.asarray(
+        np.sign(rng.standard_normal((n, k))), jnp.float32))
+    seq = np.asarray(dispatch.packed_gemm(
+        ap, wp, k_true=k,
+        config=GemmConfig(backend=f"shard-{family}", mesh=mesh)))
+    ring = np.asarray(dispatch.packed_gemm(
+        ap, wp, k_true=k,
+        config=GemmConfig(backend=f"shard-{family}", mesh=mesh,
+                          overlap_collective=True)))
+    np.testing.assert_array_equal(ring, seq)
+    a4, _, ap4, wp4 = _plane_operands(7, m, k, n, 4)
+    seq4 = np.asarray(dispatch.packed_kbit_gemm(
+        ap4, wp4, config=GemmConfig(backend=f"shard-{family}", mesh=mesh)))
+    ring4 = np.asarray(dispatch.packed_kbit_gemm(
+        ap4, wp4, config=GemmConfig(backend=f"shard-{family}", mesh=mesh,
+                                    overlap_collective=True)))
+    np.testing.assert_array_equal(ring4, seq4)
+
+
+@pytest.mark.parametrize("family", ["vpu", "mxu"])
+def test_overlap_collective_grouped_bit_identity(mesh_factory, family):
+    """The grouped (MoE expert-stacked) shard path honors the flag too —
+    the ring runs inside each expert-axis group (1-bit and k-bit)."""
+    mesh = mesh_factory(4)
+    t_rows, k, n, e = 10, 90, 7, 3
+    rng = np.random.default_rng(9)
+    xs = jnp.asarray(rng.standard_normal((t_rows, k)), jnp.float32)
+    gs = jnp.asarray([4, 3, 3], jnp.int32)
+    w1p = jnp.stack([bitpack.pack_sign(jnp.asarray(
+        np.sign(rng.standard_normal((n, k))), jnp.float32))
+        for _ in range(e)])
+    for kw in ({}, {"w_bits": 4, "a_bits": 4}):
+        wstack = w1p if not kw else jnp.stack(
+            [_plane_operands(e * 31 + i, 2, k, n, 4)[3] for i in range(e)])
+        seq = np.asarray(dispatch.quant_gemm_grouped(
+            xs, wstack, gs, k_true=k,
+            config=GemmConfig(backend=f"shard-{family}", mesh=mesh), **kw))
+        ring = np.asarray(dispatch.quant_gemm_grouped(
+            xs, wstack, gs, k_true=k,
+            config=GemmConfig(backend=f"shard-{family}", mesh=mesh,
+                              overlap_collective=True), **kw))
+        np.testing.assert_array_equal(ring, seq)
+
+
 # ---------------------------------------------------------------------------
 # decode-shape tile clamp (satellite): bm follows next-pow2(M) below 8
 # ---------------------------------------------------------------------------
