@@ -15,7 +15,12 @@ Shapes covered (the dispatch-routed GEMMs the smoke gate actually hits):
   serving (N, K), both k-bit families at the swept widths — so the
   decode latency rows (the mxu-k vs vpu-k acceptance comparison) run on
   measured tiles, M=1 rows included (the bm-clamp heuristic rows these
-  entries override).
+  entries override);
+* the fused decode-attention split-KV knobs (kernels/attn_decode.py) at
+  the attn-family latency shapes — decode M in {1, 8, 32} over the
+  cache_len-2048 serve rig, contiguous kv-tile AND paged
+  blocks-per-step — keyed ``attn-ctg``/``attn-pgd`` in the SAME cache,
+  so ``KVCache.attend`` picks measured split sizes.
 
 ``--full`` adds the full-size fig1/kbit sweep shapes (slow on a CPU rig:
 the Pallas kernels autotune in interpret mode there — winners are only
@@ -100,6 +105,23 @@ def main() -> None:
             print(f"M={m:4d} N={n:4d} Kw={kw:3d} {backend:8s} -> "
                   f"bm={win.bm} bn={win.bn} bkw={win.bkw} "
                   f"chunk={win.chunk_words}  ({dt:.1f}s)")
+
+    # fused decode-attention split-KV knobs (benchmarks/attn_bench.py's
+    # latency shapes; kvh/dh from the smoke-arch attention geometry)
+    from repro.kernels import attn_decode
+    kvh, dh, cache_len, block = 2, 16, 2048, 256
+    for layout in ("ctg", "pgd"):
+        for m in (1, 8, 32):
+            t0 = time.perf_counter()
+            # attn candidates differ by ~10-20% (not the 2-5x of GEMM
+            # tiles), so time them on a larger sample
+            win, timings = attn_decode.autotune_attn_tiles(
+                m, 1, cache_len, kvh, dh, layout, g=2, block_size=block,
+                iters=max(args.iters, 8))
+            dt = time.perf_counter() - t0
+            knob = "kv_tile" if layout == "ctg" else "blocks_per_step"
+            print(f"M={m:4d} L={cache_len} attn-{layout} -> {knob}={win}  "
+                  f"({dt:.1f}s)")
     dispatch._save_tile_cache(args.out)
     n = len(dispatch._tuned_tiles())
     print(f"wrote {n} entries to {args.out}")

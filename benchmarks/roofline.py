@@ -22,6 +22,27 @@ matching what the decode bench family measures.  Real MXUs have r >> 2
 (the systolic array retires orders of magnitude more MACs/cycle than the
 VPU retires word-ops), which only moves the break-even *down*; the
 conservative default keeps the crossover visible inside the swept widths.
+
+``--attn`` prints the decode-attention *path* model — per decode step,
+per layer, the bytes each execution path moves over the KV cache
+(kernels/attn_decode.py vs the dense-gather oracle) at serving shapes:
+
+* gather-fp: the paged oracle materialises the dense ``(B, L, KVH, Dh)``
+  K AND V view before ``_sdpa`` — pool read + dense write + dense
+  re-read, 3x the cache bytes (the contiguous layout skips the copy but
+  still streams the full fp cache);
+* fused-fp: the flash-decode kernel reads each mapped block in place,
+  exactly once — 1x the fp cache bytes;
+* fused-int8 / fused-1bit: same single pass over 4x / ~16x narrower
+  codes (+ scale planes).
+
+Attention FLOPs are identical across paths (2 MAC passes over H*L*Dh per
+row), so the comparison is again pure arithmetic intensity: fp decode
+attention sits far below the compute roof (intensity ~= G/4 MACs/byte at
+fp32 — G the GQA group count), i.e. it is HBM-bound and time/step scales
+with the bytes column; the quantized tiers raise intensity toward (and
+past) the ``r * VPU_WORD_OPS / HBM_BW`` crossover, where the kernel
+stops being a bandwidth problem at all.
 """
 
 from __future__ import annotations
@@ -122,6 +143,59 @@ def print_kbit(n, k, r):
               f"{row['pop_bound']:<7} {row['mxu_bound']:<7} {row['winner']}")
 
 
+# ---------------------------------------------------------------------------
+# --attn: decode-attention gather vs fused path model (see module docstring)
+# ---------------------------------------------------------------------------
+
+
+def attn_path_rows(b, l, kvh, g, dh, r):
+    """Per (path x decode-M) rows: KV bytes moved per decode step per
+    layer, attention MACs (identical across paths), intensity, the
+    roofline terms and the byte multiplier vs fused-fp."""
+    from repro.kernels.attn_decode import kv_code_shapes
+
+    import numpy as np
+
+    macs = 2 * b * kvh * g * l * dh  # QK + PV MAC passes
+    small = 4 * b * kvh * g * dh * 2  # q in + out, fp32 (negligible)
+    paths = []
+    for name, bits in (("gather-fp", None), ("fused-fp", None),
+                       ("fused-int8", 8), ("fused-1bit", 1)):
+        (code, cdt), sc = kv_code_shapes(bits, kvh, dh, np.float32)
+        per_tok = 2 * (int(np.prod(code)) * np.dtype(cdt).itemsize
+                       + (int(np.prod(sc[0])) * np.dtype(sc[1]).itemsize
+                          if sc is not None else 0))
+        mult = 3 if name == "gather-fp" else 1  # pool read+dense write+read
+        paths.append((name, mult * b * l * per_tok + small))
+    fp_bytes = dict(paths)["fused-fp"]
+    for name, bytes_ in paths:
+        t_mem = bytes_ / HBM_BW
+        t_comp = macs / (r * VPU_WORD_OPS)
+        yield {
+            "path": name, "B": b, "L": l,
+            "bytes": bytes_, "bytes_vs_fused_fp": bytes_ / fp_bytes,
+            "intensity": macs / bytes_,
+            "t_mem": t_mem, "t_comp": t_comp,
+            "bound": "compute" if t_comp > t_mem else "memory",
+        }
+
+
+def print_attn(l, kvh, g, dh, r):
+    crossover = r * VPU_WORD_OPS / HBM_BW
+    print(f"# decode-attention path model: dense gather vs fused "
+          f"flash-decode, L={l} KVH={kvh} G={g} Dh={dh}")
+    print(f"# bytes/step/layer over the KV cache; MACs identical across "
+          f"paths -> compute-bound past intensity {crossover:.1f} MAC/B")
+    print(f"{'path':<11} {'B':>3}  {'KV bytes':>12} {'vs fused-fp':>11} "
+          f"{'MAC/B':>7}  {'t_mem':>9} {'t_comp':>9}  bound")
+    for b in (1, 8, 32, 64):
+        for row in attn_path_rows(b, l, kvh, g, dh, r):
+            print(f"{row['path']:<11} {row['B']:>3}  {row['bytes']:>12,} "
+                  f"{row['bytes_vs_fused_fp']:>10.2f}x "
+                  f"{row['intensity']:>7.2f}  {row['t_mem']:>9.2e} "
+                  f"{row['t_comp']:>9.2e}  {row['bound']}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
@@ -136,9 +210,24 @@ def main():
     ap.add_argument("--mxu-vpu-ratio", type=float, default=2.0,
                     help="int8 MXU MACs per VPU word-op per unit time "
                          "(conservative; real MXUs are far higher)")
+    ap.add_argument("--attn", action="store_true",
+                    help="print the decode-attention gather-vs-fused path "
+                         "model instead of the dryrun table")
+    ap.add_argument("--attn-l", type=int, default=4096,
+                    help="cache length for --attn")
+    ap.add_argument("--attn-kvh", type=int, default=8,
+                    help="KV heads for --attn")
+    ap.add_argument("--attn-g", type=int, default=4,
+                    help="GQA group count (query heads per KV head)")
+    ap.add_argument("--attn-dh", type=int, default=128,
+                    help="head dim for --attn")
     args = ap.parse_args()
     if args.kbit:
         print_kbit(args.kbit_n, args.kbit_k, args.mxu_vpu_ratio)
+        return
+    if args.attn:
+        print_attn(args.attn_l, args.attn_kvh, args.attn_g, args.attn_dh,
+                   args.mxu_vpu_ratio)
         return
     recs = load(args.dir)
     if args.csv:

@@ -20,6 +20,12 @@ BENCH files are comparable across PRs.
   overlap     beyond-paper: the overlap_collective on/off bit-identity
               gate on the sharded "k" layout (ring reduce-scatter ==
               sequential psum == single device; needs >= 2 devices)
+  attn        beyond-paper: fused flash-decode attention vs the dense
+              gather + masked-sdpa oracle — CI-gated fused==oracle
+              allclose + quantized-KV error-bound rows (both layouts,
+              kv_bits in {fp, int8, 1bit}), per-step latency at the
+              serve shapes, and the pool-bytes reduction rows.  Like
+              decode, run WITHOUT the virtual multi-device split
   table1      model size binary vs fp (LeNet, ResNet-18)
   table2      partial binarization sizes by ResNet stage
   accuracy    Table 1/2 accuracy mechanism (synthetic data; direction only)
@@ -91,8 +97,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig3,pack,kbit,shard,decode,"
-                         "overlap,table1,table2,accuracy,lm_sizes,equiv,"
-                         "serve,train")
+                         "overlap,attn,table1,table2,accuracy,lm_sizes,"
+                         "equiv,serve,train")
     ap.add_argument("--json", default=None)
     ap.add_argument("--merge-json", action="store_true",
                     help="seed output from the existing --json file "
@@ -146,6 +152,10 @@ def main() -> None:
             _emit("overlap_gate", gemm_bench.overlap_rows(args.smoke),
                   out, fresh)
 
+    if want("attn"):
+        from benchmarks import attn_bench
+        _emit("attn", attn_bench.rows(args.smoke), out, fresh)
+
     if want("table1") or want("table2") or want("lm_sizes"):
         from benchmarks import size_bench
         if want("table1"):
@@ -185,15 +195,18 @@ def main() -> None:
         # greedy tokens against the per-request fixed-batch engine
         # (throughput rows carry no exact_match and pass through), and
         # train rows gate uncompressed-DP == single-device bit-identity
-        # plus compressed-vs-uncompressed loss tolerance
+        # plus compressed-vs-uncompressed loss tolerance, and attn rows
+        # gate fused flash-decode == gather oracle (+ quantized-KV error
+        # bounds and the pool-bytes reductions; latency rows pass through)
         rows = (out.get("equivalence", []) + out.get("shard_sweep", [])
                 + out.get("pack_prologue", []) + out.get("decode", [])
-                + out.get("overlap_gate", []) + out.get("serve", [])
-                + out.get("train", []))
+                + out.get("overlap_gate", []) + out.get("attn", [])
+                + out.get("serve", []) + out.get("train", []))
         if not rows:
             print("--fail-on-mismatch: no gated rows were produced "
                   "(include 'equiv', 'shard', 'pack', 'decode', 'overlap', "
-                  "'serve' and/or 'train' in --only)", file=sys.stderr)
+                  "'attn', 'serve' and/or 'train' in --only)",
+                  file=sys.stderr)
             raise SystemExit(1)
         bad = [r for r in rows if not r.get("exact_match", True)]
         if bad:

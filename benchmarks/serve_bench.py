@@ -27,6 +27,12 @@ Rows:
   block-table paged KV pool with chunked prefill + prefix sharing
   (``EngineConfig.kv_block_size``): greedy streams must stay bit-identical
   to the per-request reference.  Also CI-gated via ``exact_match``.
+* ``equivalence`` / ``engine=fused-attn[-paged]`` — the same request set
+  decoded through the Pallas flash-decode kernel
+  (``EngineConfig.fused_attn``; kernels/attn_decode.py) on both KV
+  layouts, fp KV storage: greedy streams must be IDENTICAL per request
+  to the reference.  CI-gated via ``exact_match`` — the serve half of
+  the fused kernel's gate (the ``attn`` family gates numeric allclose).
 * ``shared-prefix`` — an identical-prefix request stream on the paged
   engine with sharing off vs on: prefill work must drop by EXACTLY
   ``(requests - batch) * prefix_len`` tokens (every request after the
@@ -244,6 +250,31 @@ def rows(small: bool = False):
         "mismatches": len(pg_mismatch),
         "exact_match": not pg_mismatch,
     }
+
+    # -- equivalence (fused-attn): the SAME request set decoded through
+    # the Pallas flash-decode kernel (kernels/attn_decode.py) instead of
+    # gather + masked-sdpa, on both KV layouts.  fp KV storage, so greedy
+    # streams must be IDENTICAL per request to the reference — the serve
+    # half of the fused kernel's CI gate (the attn bench family gates the
+    # numeric allclose) --
+    for label, extra in (("fused-attn", {}),
+                         ("fused-attn-paged",
+                          {"kv_block_size": 8, "prefill_chunk": 5})):
+        eng_fused = Engine(eng_cont.spec, eng_cont.cfg, eng_cont.ctx,
+                           eng_cont.params,
+                           EngineConfig(batch=batch, cache_len=cache_len,
+                                        max_new_tokens=max_new,
+                                        fused_attn=True, **extra))
+        fa_results, _, _ = _run_continuous(eng_fused, reqs)
+        fa_mismatch = [r.rid for r in reqs
+                       if not np.array_equal(fa_results[r.rid],
+                                             expected[r.rid])]
+        yield {
+            "mode": "equivalence", "engine": label, "requests": len(reqs),
+            "batch": batch, "max_new": max_new,
+            "mismatches": len(fa_mismatch),
+            "exact_match": not fa_mismatch,
+        }
 
     # -- shared-prefix throughput: identical-prefix stream, paged engine
     # with and without sharing.  Every request after the first admission

@@ -1,0 +1,463 @@
+"""Gather-free fused decode attention: a Pallas flash-decode kernel over
+the KV cache's own storage — paged pool blocks consumed THROUGH the
+per-slot block tables, or contiguous slabs viewed as an identity-table
+pool — with optional quantized (int8 / 1-bit-scaled) KV dequantized per
+block tile in VMEM.
+
+Why this kernel exists: the serving hot path used to call
+``kv.gather(cache)`` every decode step, every layer — on the paged layout
+that materialises a full dense ``(B, cache_len, KVH, Dh)`` K AND V copy
+via pool indexing before ``_sdpa`` sweeps the entire static cache length
+under a mask.  Attention was the dominant per-step byte mover (the GEMMs
+are packed; the KV was not).  This kernel reads each mapped cache block
+in place exactly once:
+
+* **grid** ``(B, KVH, ceil(bps / spb))`` — batch x kv-head x split-KV
+  steps, the split axis innermost and sequential, so the online-softmax
+  running state (m, l, acc) lives in VMEM scratch across the splits of
+  one (b, h) pair and the partial-max/sum combine happens as the splits
+  retire; the normalised output is written once at the last split.
+* **block tables** — each split step covers ``spb`` table entries of the
+  query's slot.  Unmapped entries (-1: slot shorter than the table, or a
+  retired slot) are skipped at the grid level (``pl.when`` — no loads,
+  no FLOPs), which is also what keeps junk blocks out of the softmax:
+  a skipped block contributes exactly nothing to (m, l, acc).
+* **per-row length masking** — ``pool_pos`` rides along per block; rows
+  carry -1 for never-written / truncated / write-masked positions and the
+  in-kernel mask reproduces ``nn/attention._mask`` exactly (pos >= 0,
+  causal, sliding window), so ragged lengths, speculative rollback and
+  retired rows all fall out of the position plane.
+* **quantized KV** (``kv_bits``): 8 -> int8 codes + per-(head, dh-group)
+  absmax scales; 1 -> sign bytes (8 lanes per uint8) + per-head alpha
+  (the XNOR tier, mean-|x| a la BMXNet Eq. 1).  The kernel dequantises
+  one (block_size, Dh) tile at a time in VMEM — HBM only ever moves the
+  narrow codes, 2-4x (int8) to ~16x (1-bit) fewer KV bytes per step.
+
+The contiguous layout routes through the SAME kernel: a ``(B, L, ...)``
+slab reshapes (free) to a ``(B * L/t, t, ...)`` pool with an arange block
+table, where the tile ``t`` is the autotunable split-KV block.  Queries
+are a ``(B, C)`` tile — C == 1 is plain decode, C > 1 is the chunked-
+prefill / speculative-verify window (per-row causal masking from the
+absolute positions, exactly like the jnp path).
+
+Like every kernel here it runs in interpret mode on CPU hosts
+(REPRO_PALLAS_INTERPRET, same convention as pack_bits.py).  On real TPUs
+the scalar block-table reads belong in SMEM via
+``pltpu.PrefetchScalarGridSpec`` — a lowering detail the interpret rig
+does not exercise; the dynamic-index loads below are the portable
+spelling.
+
+Numerics vs the gather oracle (``kv.gather`` + ``_sdpa``): scores and
+softmax run in fp32 with the same scale/softcap/mask semantics; only the
+summation ORDER differs (block-wise online rescale vs one full-length
+softmax), so fp-KV results agree to tight fp32 allclose — the CI bench
+family gates that, plus greedy token identity on the serve rig.
+Quantized-KV rows agree with the oracle reading the SAME quantized pool
+(both dequantise identical codes) and carry a measured error bound vs
+the fp reference.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+DEFAULT_CTG_TILE = 512  # contiguous split-KV tile (tokens per grid step)
+DEFAULT_PGD_SPB = 4  # paged table entries per grid step
+
+
+def _env_interpret() -> bool:
+    """Pallas interpret-mode default (shared convention: pack_bits.py)."""
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    return _env_interpret() if interpret is None else bool(interpret)
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV storage codecs — shared by the cache write paths
+# (nn/attention.py quantises on fill) and the in-kernel dequant below.
+# ---------------------------------------------------------------------------
+
+
+def kv_scale_groups(d_head: int) -> int:
+    """dh-group count for the int8 absmax scales: 32-channel groups when
+    Dh divides, else one group per head (smoke heads are Dh=16)."""
+    return d_head // 32 if d_head % 32 == 0 else 1
+
+
+def kv_quantize(bits: int, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """fp (..., KVH, Dh) -> (codes, scale).
+
+    * bits == 8: int8 codes (..., KVH, Dh), fp32 absmax scales
+      (..., KVH, n_groups) per (head, dh-group) — symmetric round-to-
+      nearest, absmax/127.
+    * bits == 1: sign bytes (..., KVH, Dh/8) uint8 (lane i of byte w is
+      element 8w+i, sign(0) = +1) + per-head fp32 alpha (..., KVH) =
+      mean |x| over Dh (XNOR-Net Eq. 1 applied to the cache).
+    """
+    xf = x.astype(jnp.float32)
+    dh = x.shape[-1]
+    if bits == 8:
+        g = kv_scale_groups(dh)
+        grp = xf.reshape(*x.shape[:-1], g, dh // g)
+        amax = jnp.abs(grp).max(axis=-1)
+        scale = jnp.maximum(amax / 127.0, 1e-30)
+        codes = jnp.clip(jnp.round(grp / scale[..., None]), -127, 127)
+        return codes.reshape(x.shape).astype(jnp.int8), scale
+    if bits == 1:
+        if dh % 8:
+            raise ValueError(f"kv_bits=1 needs d_head % 8 == 0, got {dh}")
+        alpha = jnp.abs(xf).mean(axis=-1)
+        bits_ = (xf >= 0).astype(jnp.uint8).reshape(*x.shape[:-1], dh // 8, 8)
+        weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+        words = (bits_ * weights).sum(axis=-1, dtype=jnp.uint8)
+        return words, alpha
+    raise ValueError(f"kv_bits must be 8 or 1, got {bits}")
+
+
+def kv_dequantize(bits: int, codes: jax.Array, scale: jax.Array,
+                  d_head: int, dtype=jnp.float32) -> jax.Array:
+    """Invert :func:`kv_quantize`: (codes, scale) -> fp (..., KVH, Dh)."""
+    if bits == 8:
+        g = kv_scale_groups(d_head)
+        grp = codes.astype(jnp.float32).reshape(
+            *codes.shape[:-1], g, d_head // g)
+        return (grp * scale[..., None]).reshape(
+            *codes.shape[:-1], d_head).astype(dtype)
+    if bits == 1:
+        shifts = jnp.arange(8, dtype=jnp.uint8)
+        b = (codes[..., None] >> shifts) & jnp.uint8(1)
+        signs = (2.0 * b.astype(jnp.float32) - 1.0).reshape(
+            *codes.shape[:-1], d_head)
+        return (signs * scale[..., None]).astype(dtype)
+    raise ValueError(f"kv_bits must be 8 or 1, got {bits}")
+
+
+def kv_code_shapes(bits: int | None, kvh: int, dh: int, dtype):
+    """Per-token trailing (shape, dtype) pairs for the K (or V) leaf and
+    its scale leaf under a given storage tier; scale entry is None for fp.
+    Used by both cache layouts' ``init`` so allocation cannot drift from
+    the codec."""
+    if bits is None:
+        return ((kvh, dh), dtype), None
+    if bits == 8:
+        return ((kvh, dh), jnp.int8), ((kvh, kv_scale_groups(dh)),
+                                       jnp.float32)
+    if bits == 1:
+        if dh % 8:
+            raise ValueError(f"kv_bits=1 needs d_head % 8 == 0, got {dh}")
+        return ((kvh, dh // 8), jnp.uint8), ((kvh,), jnp.float32)
+    raise ValueError(f"kv_bits must be None, 8 or 1, got {bits}")
+
+
+# ---------------------------------------------------------------------------
+# The kernel
+# ---------------------------------------------------------------------------
+
+
+def _dequant_tile(kv_bits, codes, scale, dh):
+    """One (bs, Dh-coded) VMEM tile -> (bs, Dh) fp32."""
+    if kv_bits is None:
+        return codes.astype(jnp.float32)
+    return kv_dequantize(kv_bits, codes, scale, dh, jnp.float32)
+
+
+def _make_kernel(*, c, g, dh, bs, bps, spb, n_steps, kv_bits, sm_scale,
+                 cap, causal, window):
+    """Build the flash-decode kernel body for one static configuration.
+
+    Ref order: table, q_pos, q, [pool_k, (k_scale)], [pool_v, (v_scale)],
+    pool_pos, out, then scratch m/l/acc.  All compile-time shape knobs
+    arrive through the closure — the repo's kernels are traced per jitted
+    configuration anyway.
+    """
+    cg = c * g
+
+    def kernel(tab_ref, qp_ref, q_ref, *refs):
+        if kv_bits is None:
+            pk_ref, pv_ref, pp_ref, o_ref, m_ref, l_ref, acc_ref = refs
+            ks_ref = vs_ref = None
+        else:
+            (pk_ref, ks_ref, pv_ref, vs_ref, pp_ref, o_ref,
+             m_ref, l_ref, acc_ref) = refs
+        h = pl.program_id(1)
+        j = pl.program_id(2)
+
+        @pl.when(j == 0)
+        def _init():
+            m_ref[...] = jnp.full((cg, 1), NEG_INF, jnp.float32)
+            l_ref[...] = jnp.zeros((cg, 1), jnp.float32)
+            acc_ref[...] = jnp.zeros((cg, dh), jnp.float32)
+
+        qt = q_ref[0, :, 0, :, :].reshape(cg, dh).astype(jnp.float32)
+        qp = jnp.repeat(qp_ref[0, :], g).reshape(cg, 1)
+
+        for e in range(spb):
+            jj = j * spb + e
+            jjc = jnp.minimum(jj, bps - 1)
+            blk = tab_ref[0, jjc]
+            # grid-level skip: unmapped (-1) table entries and the ragged
+            # tail of the last split step cost nothing and add nothing
+            mapped = (jj < bps) & (blk >= 0)
+
+            @pl.when(mapped)
+            def _accumulate():
+                # head indexing happens HERE, not in the pool BlockSpecs:
+                # grid-invariant full-pool blocks let the interpret rig's
+                # XLA while-loop hoist the pool materialisation out of the
+                # grid loop (a per-head BlockSpec slice would be a strided
+                # copy per grid step); a TPU lowering would instead DMA
+                # `tab[b, jj]`-indexed blocks via PrefetchScalarGridSpec.
+                ksc = None if ks_ref is None else ks_ref[blk, :, h]
+                vsc = None if vs_ref is None else vs_ref[blk, :, h]
+                kt = _dequant_tile(kv_bits, pk_ref[blk, :, h, :], ksc, dh)
+                vt = _dequant_tile(kv_bits, pv_ref[blk, :, h, :], vsc, dh)
+                kp = pp_ref[blk, :].reshape(1, bs)
+                s = jnp.dot(qt, kt.T,
+                            preferred_element_type=jnp.float32) * sm_scale
+                if cap is not None:
+                    s = cap * jnp.tanh(s / cap)
+                valid = kp >= 0  # empty / truncated rows carry pos -1
+                if causal:
+                    valid &= kp <= qp
+                if window is not None:
+                    valid &= kp > qp - window
+                s = jnp.where(valid, s, NEG_INF)
+                m_new = jnp.maximum(m_ref[...], s.max(axis=1, keepdims=True))
+                alpha = jnp.exp(m_ref[...] - m_new)
+                p = jnp.exp(s - m_new)
+                l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+                acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+                    p, vt, preferred_element_type=jnp.float32)
+                m_ref[...] = m_new
+
+        @pl.when(j == n_steps - 1)
+        def _finish():
+            # combine: the splits' partial (m, l, acc) have already been
+            # merged by the running rescale; normalise and emit.  Fully
+            # masked rows (l == 0: empty slot) emit zeros — callers only
+            # consume active rows (same contract as write_mask).
+            out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-37)
+            o_ref[...] = out.reshape(1, c, 1, g, dh)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "kv_bits", "sm_scale", "logit_softcap",
+                     "causal", "window", "blocks_per_step", "interpret"))
+def flash_decode_paged(
+    table: jax.Array,  # (B, bps) int32 block ids, -1 = unmapped
+    q: jax.Array,  # (B, C, KVH, G, Dh)
+    q_pos: jax.Array,  # (B, C) int32 absolute query positions
+    pool_k: jax.Array,  # (nb, bs, KVH, Dh) fp | int8 codes | uint8 signs
+    pool_v: jax.Array,
+    pool_pos: jax.Array,  # (nb, bs) int32, -1 = empty
+    k_scale: jax.Array | None = None,  # (nb, bs, KVH[, groups]) fp32
+    v_scale: jax.Array | None = None,
+    *,
+    block_size: int,
+    kv_bits: int | None = None,
+    sm_scale: float,
+    logit_softcap: float | None = None,
+    causal: bool = True,
+    window: int | None = None,
+    blocks_per_step: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused paged flash-decode attention: (B, C, KVH, G, Dh) fp32 out.
+
+    Consumes the paged pool directly through ``table`` — no dense gather;
+    see the module docstring for grid/mask/quantisation semantics."""
+    b, c, kvh, g, dh = q.shape
+    nb, bs = pool_pos.shape
+    bps = table.shape[1]
+    assert bs == block_size, (bs, block_size)
+    spb = blocks_per_step or min(DEFAULT_PGD_SPB, bps)
+    n_steps = -(-bps // spb)
+    cg = c * g
+
+    grid = (b, kvh, n_steps)
+    code_dh = pool_k.shape[-1]
+    in_specs = [
+        pl.BlockSpec((1, bps), lambda b_, h, j: (b_, 0)),
+        pl.BlockSpec((1, c), lambda b_, h, j: (b_, 0)),
+        pl.BlockSpec((1, c, 1, g, dh), lambda b_, h, j: (b_, 0, h, 0, 0)),
+    ]
+    operands = [table, q_pos, q]
+    # pool blocks are the FULL arrays at a grid-invariant index — the
+    # kernel body does the (block, head) indexing, so the interpret rig
+    # hoists the pool materialisation out of the grid loop (see kernel)
+    pool_spec = pl.BlockSpec((nb, bs, kvh, code_dh),
+                             lambda b_, h, j: (0, 0, 0, 0))
+    if kv_bits is None:
+        in_specs += [pool_spec, pool_spec]
+        operands += [pool_k, pool_v]
+    else:
+        if kv_bits == 8:
+            ng = kv_scale_groups(dh)
+            sc_spec = pl.BlockSpec((nb, bs, kvh, ng),
+                                   lambda b_, h, j: (0, 0, 0, 0))
+        else:
+            sc_spec = pl.BlockSpec((nb, bs, kvh),
+                                   lambda b_, h, j: (0, 0, 0))
+        in_specs += [pool_spec, sc_spec, pool_spec, sc_spec]
+        operands += [pool_k, k_scale, pool_v, v_scale]
+    in_specs.append(pl.BlockSpec((nb, bs), lambda b_, h, j: (0, 0)))
+    operands.append(pool_pos)
+
+    kernel = _make_kernel(
+        c=c, g=g, dh=dh, bs=bs, bps=bps, spb=spb, n_steps=n_steps,
+        kv_bits=kv_bits, sm_scale=sm_scale, cap=logit_softcap,
+        causal=causal, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, c, 1, g, dh),
+                               lambda b_, h, j: (b_, 0, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, kvh, g, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((cg, 1), jnp.float32),
+            pltpu.VMEM((cg, 1), jnp.float32),
+            pltpu.VMEM((cg, dh), jnp.float32),
+        ],
+        interpret=_resolve_interpret(interpret),
+    )(*operands)
+
+
+def flash_decode_contig(
+    q: jax.Array,  # (B, C, KVH, G, Dh)
+    q_pos: jax.Array,  # (B, C)
+    k: jax.Array,  # (B, L, KVH, Dh) fp | codes
+    v: jax.Array,
+    slot_pos: jax.Array,  # (B, L) int32
+    k_scale: jax.Array | None = None,  # (B, L, KVH[, groups])
+    v_scale: jax.Array | None = None,
+    *,
+    kv_bits: int | None = None,
+    sm_scale: float,
+    logit_softcap: float | None = None,
+    causal: bool = True,
+    window: int | None = None,
+    kv_tile: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Contiguous-slab variant: the per-slot ``(B, L, ...)`` slab is a
+    pool of ``L / t`` tiles per slot under an arange block table — a free
+    reshape, after which the SAME paged kernel runs.  ``kv_tile`` is the
+    split-KV tile (autotuned via :func:`select_attn_tiles`)."""
+    b, l = slot_pos.shape
+    t = kv_tile or DEFAULT_CTG_TILE
+    while l % t:  # tile must divide the slab; fall back toward 1
+        t //= 2
+    nt = l // t
+
+    def pooled(x):
+        return x.reshape(b * nt, t, *x.shape[2:])
+
+    table = jnp.arange(b * nt, dtype=jnp.int32).reshape(b, nt)
+    return flash_decode_paged(
+        table, q, q_pos, pooled(k), pooled(v), pooled(slot_pos),
+        None if k_scale is None else pooled(k_scale),
+        None if v_scale is None else pooled(v_scale),
+        block_size=t, kv_bits=kv_bits, sm_scale=sm_scale,
+        logit_softcap=logit_softcap, causal=causal, window=window,
+        blocks_per_step=1, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Tile selection + autotune — attention entries ride the SAME persisted
+# tile cache as the GEMM backends (kernels/dispatch.py), keyed
+# (m=B*C, n=cache_len, kw=Dh, backend="attn-ctg"/"attn-pgd"); only the
+# TileConfig's ``bkw`` slot is meaningful (contiguous: split-KV tile
+# tokens; paged: table entries per grid step).
+# ---------------------------------------------------------------------------
+
+
+def _attn_key(b: int, c: int, cache_len: int, dh: int, layout: str):
+    return (b * c, cache_len, dh, f"attn-{layout}")
+
+
+def select_attn_tiles(b: int, c: int, cache_len: int, dh: int,
+                      layout: str) -> int:
+    """Tuned split-KV knob for a decode shape, else the default.
+    ``layout``: "ctg" (returns the kv tile) | "pgd" (blocks per step)."""
+    from repro.kernels import dispatch
+
+    hit = dispatch._tuned_tiles().get(_attn_key(b, c, cache_len, dh, layout))
+    if hit is not None:
+        return hit.bkw
+    return DEFAULT_CTG_TILE if layout == "ctg" else DEFAULT_PGD_SPB
+
+
+def _tile_candidates(layout: str, cache_len: int, block_size: int):
+    if layout == "ctg":
+        return sorted({t for t in (64, 128, 256, 512, 1024)
+                       if t <= cache_len and cache_len % t == 0}
+                      | {cache_len})
+    bps = cache_len // block_size
+    return sorted({s for s in (1, 2, 4, 8, 16) if s <= bps} | {bps})
+
+
+def autotune_attn_tiles(b: int, c: int, cache_len: int, kvh: int, dh: int,
+                        layout: str, *, g: int = 1, block_size: int = 16,
+                        kv_bits: int | None = None, iters: int = 3,
+                        interpret: bool | None = None):
+    """Time the fused kernel over the split-KV candidates for one decode
+    shape and register the winner in dispatch's tuned-tile cache (the
+    committed ``benchmarks/tile_cache.json``; ``REPRO_TILE_CACHE`` seeds
+    it back at load).  Returns (winner, per-candidate seconds)."""
+    import time
+
+    from repro.kernels import dispatch
+
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv_, kp = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (b, c, kvh, g, dh), jnp.float32)
+    q_pos = jnp.broadcast_to(
+        jnp.arange(cache_len - c, cache_len, dtype=jnp.int32), (b, c))
+    kf = jax.random.normal(kk, (b, cache_len, kvh, dh), jnp.float32)
+    vf = jax.random.normal(kv_, (b, cache_len, kvh, dh), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(cache_len, dtype=jnp.int32),
+                           (b, cache_len))
+    del kp
+    sm = dh ** -0.5
+
+    def run_ctg(t):
+        return flash_decode_contig(
+            q, q_pos, kf, vf, pos, kv_bits=None, sm_scale=sm, kv_tile=t,
+            interpret=interpret)
+
+    def run_pgd(s):
+        bs = block_size
+        nt = cache_len // bs
+        table = jnp.arange(b * nt, dtype=jnp.int32).reshape(b, nt)
+        return flash_decode_paged(
+            table, q, q_pos, kf.reshape(b * nt, bs, kvh, dh),
+            vf.reshape(b * nt, bs, kvh, dh), pos.reshape(b * nt, bs),
+            block_size=bs, kv_bits=None, sm_scale=sm, blocks_per_step=s,
+            interpret=interpret)
+
+    run = run_ctg if layout == "ctg" else run_pgd
+    timings = {}
+    for cand in _tile_candidates(layout, cache_len, block_size):
+        run(cand).block_until_ready()  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            run(cand).block_until_ready()
+        timings[cand] = (time.perf_counter() - t0) / iters
+    win = min(timings, key=timings.get)
+    dispatch._tuned_tiles()[_attn_key(b, c, cache_len, dh, layout)] = \
+        dispatch.TileConfig(bm=b * c, bn=cache_len, bkw=win, chunk_words=win)
+    return win, timings

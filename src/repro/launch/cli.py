@@ -57,6 +57,24 @@ def add_gemm_flags(ap: argparse.ArgumentParser, *names: str,
                          "rows drop and are never quantized or packed")
 
 
+def add_attn_flags(ap: argparse.ArgumentParser) -> None:
+    """The decode-attention execution/storage flag block (serve-only).
+    ``--fused-attn`` swaps the gather + masked-sdpa decode path for the
+    Pallas flash-decode kernel reading the KV storage in place
+    (kernels/attn_decode.py); ``--kv-bits`` picks the KV storage tier —
+    greedy output stays token-identical under fp KV, and quantized tiers
+    are gated by their own bench error-bound + serve token rows."""
+    ap.add_argument("--fused-attn", action="store_true",
+                    help="route decode/window attention through the fused "
+                         "Pallas flash-decode kernel (no dense KV gather); "
+                         "off = the gather + masked-sdpa oracle path")
+    ap.add_argument("--kv-bits", type=int, default=None, choices=[8, 1],
+                    help="KV-cache storage tier: 8 = int8 codes + per-"
+                         "(head, dh-group) absmax scales, 1 = sign bytes + "
+                         "per-head alpha (the XNOR tier); default fp "
+                         "compute dtype")
+
+
 def add_spec_flags(ap: argparse.ArgumentParser) -> None:
     """The speculative-decoding flag block (serve-only).  ``--draft``
     derives a depth-sliced draft model from the loaded float checkpoint

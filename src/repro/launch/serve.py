@@ -16,6 +16,13 @@ and ``--shared-prefix`` to refcount-share already-prefilled prompt-prefix
 blocks across requests (the request-stream demo prepends a common
 "system prompt" and reports the prefill tokens saved).
 
+``--fused-attn`` routes decode/window attention through the Pallas
+flash-decode kernel (kernels/attn_decode.py) — the KV storage is read in
+place through the block tables instead of dense-gathered every step —
+and ``--kv-bits {8,1}`` stores the KV cache itself quantized (int8
+absmax / 1-bit sign + alpha, the paper's memory argument applied to the
+cache).  Greedy tokens are identical to the gather path under fp KV.
+
 Example:
   PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b --smoke \
       --steps 50 --quant binary --export-packed /tmp/g.packed.npz
@@ -110,6 +117,7 @@ def main() -> None:
                          "across identical-prefix requests (the request-"
                          "stream demo gives every prompt a common prefix "
                          "so the savings show up in the stats line)")
+    cli.add_attn_flags(ap)
     cli.add_spec_flags(ap)
     ap.add_argument("--request-stream", action="store_true",
                     help="continuous-batching demo mode: submit 2x "
@@ -166,8 +174,14 @@ def main() -> None:
                         kv_block_size=args.kv_block_size,
                         prefill_chunk=args.prefill_chunk,
                         shared_prefix=args.shared_prefix,
-                        draft=draft, spec_len=args.spec_len)
+                        draft=draft, spec_len=args.spec_len,
+                        fused_attn=args.fused_attn, kv_bits=args.kv_bits)
     eng = Engine(spec, cfg, ctx, params, ecfg)
+    if args.fused_attn or args.kv_bits:
+        tier = {None: "fp", 8: "int8", 1: "1-bit"}[args.kv_bits]
+        print(f"decode attention: "
+              f"{'fused flash-decode' if args.fused_attn else 'gather'}"
+              f" kernel, {tier} KV storage")
 
     rng = np.random.default_rng(args.seed)
 

@@ -369,7 +369,11 @@ def cache_insert(cache: Params, sub: Params, slots: jax.Array,
     pos-reset of freshly mapped blocks replaces the full-slot-overwrite
     invariant."""
     kv = attn_lib.CONTIGUOUS if kv is None else kv
-    if isinstance(kv, attn_lib.ContiguousKVCache):
+    if isinstance(kv, attn_lib.ContiguousKVCache) and kv.kv_bits is None:
+        # fp contiguous: cache and sub are structurally identical pytrees,
+        # one tree-mapped row insertion covers every leaf.  Quantized
+        # contiguous caches carry scale leaves the fp sub-cache lacks, so
+        # they take the per-layer path (kv.insert encodes on the way in).
         return jax.tree.map(
             lambda big, small: attn_lib.insert_rows(big, small, slots),
             cache, sub,

@@ -20,6 +20,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import qlayers
+from repro.kernels import attn_decode as attn_kernels
+from repro.kernels.attn_decode import (kv_code_shapes, kv_dequantize,
+                                       kv_quantize)
 from repro.nn.common import QCtx, rope, softcap
 
 Params = dict[str, Any]
@@ -44,6 +47,18 @@ class AttnConfig:
     full_attn_max_seq: int = 4096
     chunk_q: int = 512
     chunk_kv: int = 1024
+    # decode-attention execution (serving): route attn_decode/attn_window
+    # through the Pallas flash-decode kernel (kernels/attn_decode.py)
+    # instead of gather + _sdpa.  False keeps the gather path — the
+    # oracle the fused kernel is CI-gated against (the fused_prologue
+    # idiom).  Cross-attention reads always stay on the gather path.
+    fused_attn: bool = False
+    # KV-cache storage tier: None = fp compute dtype; 8 = int8 codes +
+    # per-(head, dh-group) absmax scales; 1 = packed sign bytes + per-head
+    # alpha (the XNOR tier).  The KVCache layout carrying the same value
+    # quantises on write; gather() dequantises, so the oracle path reads
+    # the identical quantized pool.
+    kv_bits: int | None = None
 
     @property
     def groups(self) -> int:
@@ -263,7 +278,19 @@ class KVCache:
     Layouts: :class:`ContiguousKVCache` (per-slot (B, L, H, Dh) storage —
     the PR 5 scheduler layout) and :class:`PagedKVCache` (shared block
     pool + per-slot int32 block tables — block-granular allocation and
-    refcounted prefix sharing; see serve/engine.py)."""
+    refcounted prefix sharing; see serve/engine.py).
+
+    Both layouts optionally store K/V quantized (``kv_bits``: 8 = int8
+    codes + per-(head, dh-group) absmax scales, 1 = packed sign bytes +
+    per-head alpha — kernels/attn_decode.py owns the codec): ``fill`` /
+    ``fill_window`` / ``insert`` quantise the projected fp k/v on write
+    (scale leaves ride beside the code leaves through the same one-hot /
+    scatter machinery), ``gather`` dequantises, and position/visibility
+    bookkeeping (``reset``/``truncate``) is tier-agnostic — it only ever
+    touches the position plane.  ``attend`` runs the fused flash-decode
+    kernel directly on this layout's own storage (no dense gather; codes
+    dequantise per block tile in VMEM) — the ``AttnConfig.fused_attn``
+    hot path, with gather + ``_sdpa`` as its oracle."""
 
     def init(self, b: int, cfg: AttnConfig, cache_len: int,
              dtype=jnp.bfloat16) -> Params:
@@ -296,25 +323,60 @@ class KVCache:
     def gather(self, cache: Params):
         raise NotImplementedError
 
+    def attend(self, cache: Params, q, q_pos, cfg: "AttnConfig",
+               interpret: bool | None = None):
+        """Fused flash-decode attention straight off this layout's own
+        storage (``AttnConfig.fused_attn``); q (B, C, KVH, G, Dh), q_pos
+        (B, C) -> (B, C, KVH, G, Dh) fp32.  Value-equivalent to
+        ``_sdpa(cfg, q, *gather(cache))`` under :func:`_mask`."""
+        raise NotImplementedError
+
 
 @dataclasses.dataclass(frozen=True)
 class ContiguousKVCache(KVCache):
     """Per-slot contiguous storage: ``k``/``v`` (B, cache_len, KVH, Dh) +
-    ``slot_pos`` (B, cache_len).  ``gather`` is free (returns the arrays).
+    ``slot_pos`` (B, cache_len) (+ ``k_scale``/``v_scale`` when
+    ``kv_bits`` stores codes — base-class docstring).  ``gather`` is free
+    for fp (returns the arrays) and a dequant for quantized tiers.
     Local (sliding-window) layers use cache_len == window as a ring."""
 
+    kv_bits: int | None = None
+
+    def _encode(self, k, v) -> Params:
+        """Projected fp k/v (B, S, KVH, Dh) -> the storage leaves this
+        layout persists for them (codes + scales under ``kv_bits``)."""
+        if self.kv_bits is None:
+            return {"k": k, "v": v}
+        kc, ks = kv_quantize(self.kv_bits, k)
+        vc, vs = kv_quantize(self.kv_bits, v)
+        return {"k": kc, "k_scale": ks, "v": vc, "v_scale": vs}
+
     def init(self, b, cfg: AttnConfig, cache_len, dtype=jnp.bfloat16):
-        return {
-            "k": jnp.zeros((b, cache_len, cfg.n_kv_heads, cfg.d_head), dtype),
-            "v": jnp.zeros((b, cache_len, cfg.n_kv_heads, cfg.d_head), dtype),
+        (code, cdt), sc = kv_code_shapes(self.kv_bits, cfg.n_kv_heads,
+                                         cfg.d_head, dtype)
+        out = {
+            "k": jnp.zeros((b, cache_len) + code, cdt),
+            "v": jnp.zeros((b, cache_len) + code, cdt),
             "slot_pos": jnp.full((b, cache_len), -1, jnp.int32),
         }
+        if sc is not None:
+            out["k_scale"] = jnp.zeros((b, cache_len) + sc[0], sc[1])
+            out["v_scale"] = jnp.zeros((b, cache_len) + sc[0], sc[1])
+        return out
 
     def insert(self, cache, sub, slots):
         """Batch-row insertion per leaf.  Works on ANY batch-leading cache
         pytree (models tree-map it over attention + recurrent leaves).
         The inserted ``slot_pos`` rows carry -1 beyond the prompt, which
-        retires the previous occupant's stale rows."""
+        retires the previous occupant's stale rows.  Quantized tiers
+        encode the fp prefill sub-cache's k/v on the way in (the sub-cache
+        is always fp contiguous — lm.prefill's scratch layout)."""
+        if self.kv_bits is not None and "k_scale" in cache:
+            enc = self._encode(sub["k"], sub["v"])
+            return {
+                name: insert_rows(big, enc.get(name, sub.get(name)), slots)
+                for name, big in cache.items()
+            }
         return jax.tree.map(
             lambda big, small: insert_rows(big, small, slots), cache, sub
         )
@@ -354,43 +416,40 @@ class ContiguousKVCache(KVCache):
           cache_len tokens (ring wrap), both SPMD-friendly.  Windows at
           per-row starts go through :meth:`fill_window` instead.
         """
-        cache_len = cache["k"].shape[1]
+        cache_len = cache["slot_pos"].shape[1]
         s = k.shape[1]
+        enc = self._encode(k, v)  # leaf name -> (B, S, ...) storage value
+        out = dict(cache)
         if s == 1:
             slots = positions % cache_len  # (B, 1)
             mask = jnp.arange(cache_len)[None, :] == slots  # (B, L)
             if write_mask is not None:
                 mask &= write_mask[:, None]
-            m4 = mask[:, :, None, None]
-            return {
-                "k": jnp.where(m4, k.astype(cache["k"].dtype), cache["k"]),
-                "v": jnp.where(m4, v.astype(cache["v"].dtype), cache["v"]),
-                "slot_pos": jnp.where(mask, positions, cache["slot_pos"]),
-            }
+            for name, val in enc.items():
+                m = mask.reshape(mask.shape + (1,) * (val.ndim - 2))
+                out[name] = jnp.where(m, val.astype(cache[name].dtype),
+                                      cache[name])
+            out["slot_pos"] = jnp.where(mask, positions, cache["slot_pos"])
+            return out
 
         if s <= cache_len:
-            zero = (0, 0, 0, 0)
-            return {
-                "k": jax.lax.dynamic_update_slice(
-                    cache["k"], k.astype(cache["k"].dtype), zero),
-                "v": jax.lax.dynamic_update_slice(
-                    cache["v"], v.astype(cache["v"].dtype), zero),
-                "slot_pos": jax.lax.dynamic_update_slice(
-                    cache["slot_pos"], positions, (0, 0)),
-            }
+            for name, val in enc.items():
+                out[name] = jax.lax.dynamic_update_slice(
+                    cache[name], val.astype(cache[name].dtype),
+                    (0,) * val.ndim)
+            out["slot_pos"] = jax.lax.dynamic_update_slice(
+                cache["slot_pos"], positions, (0, 0))
+            return out
 
         # ring wrap: keep the last cache_len tokens; token at position p
         # lands in slot p % cache_len, i.e. a cyclic roll by
         # (s - cache_len) % L.
         shift = (s - cache_len) % cache_len
-        k_t = jnp.roll(k[:, s - cache_len:], shift, axis=1)
-        v_t = jnp.roll(v[:, s - cache_len:], shift, axis=1)
-        p_t = jnp.roll(positions[:, s - cache_len:], shift, axis=1)
-        return {
-            "k": k_t.astype(cache["k"].dtype),
-            "v": v_t.astype(cache["v"].dtype),
-            "slot_pos": p_t,
-        }
+        for name, val in enc.items():
+            out[name] = jnp.roll(val[:, s - cache_len:], shift,
+                                 axis=1).astype(cache[name].dtype)
+        out["slot_pos"] = jnp.roll(positions[:, s - cache_len:], shift, axis=1)
+        return out
 
     def fill_window(self, cache, k, v, positions, write_mask=None):
         """C-token window write at per-row start positions (speculative
@@ -400,27 +459,30 @@ class ContiguousKVCache(KVCache):
         ``positions[b, c] % cache_len``.  Within a row the window
         positions are consecutive, so the per-token one-hots never
         collide and the 0/1-coefficient einsum below reproduces a direct
-        write bit-exactly."""
-        cache_len = cache["k"].shape[1]
+        write bit-exactly (a one-hot sum selects exactly one addend, so
+        accumulating in fp32 and casting back to the storage dtype —
+        including integer code leaves — is lossless)."""
+        cache_len = cache["slot_pos"].shape[1]
         if k.shape[1] == 1:
             return self.fill(cache, k, v, positions, write_mask)
+        enc = self._encode(k, v)
         slots = positions % cache_len  # (B, C)
         oh = slots[:, :, None] == jnp.arange(cache_len)[None, None, :]
         if write_mask is not None:
             oh &= write_mask[:, None, None]
         hit = oh.any(axis=1)  # (B, L): does any window token land here?
-        ohk = oh.astype(cache["k"].dtype)
-        upd_k = jnp.einsum("bcl,bchd->blhd", ohk,
-                           k.astype(cache["k"].dtype))
-        upd_v = jnp.einsum("bcl,bchd->blhd", ohk,
-                           v.astype(cache["v"].dtype))
-        upd_p = (oh * positions[:, :, None]).sum(axis=1)
-        h4 = hit[:, :, None, None]
-        return {
-            "k": jnp.where(h4, upd_k, cache["k"]),
-            "v": jnp.where(h4, upd_v, cache["v"]),
-            "slot_pos": jnp.where(hit, upd_p, cache["slot_pos"]),
-        }
+        ohf = oh.astype(jnp.float32)
+        out = dict(cache)
+        for name, val in enc.items():
+            upd = jnp.einsum("bcl,bc...->bl...", ohf,
+                             val.astype(jnp.float32))
+            hm = hit.reshape(hit.shape + (1,) * (val.ndim - 2))
+            out[name] = jnp.where(hm, upd.astype(cache[name].dtype),
+                                  cache[name])
+        out["slot_pos"] = jnp.where(
+            hit, (oh * positions[:, :, None]).sum(axis=1),
+            cache["slot_pos"])
+        return out
 
     def truncate(self, cache, lengths):
         """Rows at positions >= lengths[b] flip to ``slot_pos = -1``:
@@ -432,15 +494,34 @@ class ContiguousKVCache(KVCache):
             slot_pos >= lengths[:, None], -1, slot_pos)}
 
     def gather(self, cache):
-        return cache["k"], cache["v"], cache["slot_pos"]
+        if self.kv_bits is None:
+            return cache["k"], cache["v"], cache["slot_pos"]
+        dh = cache["k"].shape[-1] * (8 if self.kv_bits == 1 else 1)
+        k = kv_dequantize(self.kv_bits, cache["k"], cache["k_scale"], dh)
+        v = kv_dequantize(self.kv_bits, cache["v"], cache["v_scale"], dh)
+        return k, v, cache["slot_pos"]
+
+    def attend(self, cache, q, q_pos, cfg: AttnConfig, interpret=None):
+        b, c = q_pos.shape
+        tile = attn_kernels.select_attn_tiles(
+            b, c, cache["slot_pos"].shape[1], cfg.d_head, "ctg")
+        return attn_kernels.flash_decode_contig(
+            q, q_pos, cache["k"], cache["v"], cache["slot_pos"],
+            cache.get("k_scale"), cache.get("v_scale"),
+            kv_bits=self.kv_bits, sm_scale=cfg.scale,
+            logit_softcap=cfg.logit_softcap, causal=cfg.causal,
+            window=cfg.window, kv_tile=tile, interpret=interpret)
 
 
 @dataclasses.dataclass(frozen=True)
 class PagedKVCache(KVCache):
     """Block-table paged storage over a shared pool.
 
-    Leaves: ``pool_k``/``pool_v`` (num_blocks, block_size, KVH, Dh),
-    ``pool_pos`` (num_blocks, block_size) int32 absolute token positions
+    Leaves: ``pool_k``/``pool_v`` (num_blocks, block_size, KVH, Dh)
+    (quantized tiers store codes here plus scale pools ``pool_ks``/
+    ``pool_vs`` riding the same flat-index scatters — base-class
+    docstring), ``pool_pos`` (num_blocks, block_size) int32 absolute
+    token positions
     (-1 = empty), ``table`` (B, blocks_per_slot) int32 block ids (-1 =
     unmapped — the whole slot is invisible).  Token at slot-local position
     ``p`` lives in block ``table[b, p // block_size]`` at offset
@@ -465,6 +546,35 @@ class PagedKVCache(KVCache):
     """
 
     block_size: int = 16
+    kv_bits: int | None = None
+
+    def _encode(self, k, v) -> Params:
+        """Projected fp k/v (B, S, KVH, Dh) -> the pool leaves this layout
+        persists for them (codes + scale pools under ``kv_bits``)."""
+        if self.kv_bits is None:
+            return {"pool_k": k, "pool_v": v}
+        kc, ks = kv_quantize(self.kv_bits, k)
+        vc, vs = kv_quantize(self.kv_bits, v)
+        return {"pool_k": kc, "pool_ks": ks, "pool_v": vc, "pool_vs": vs}
+
+    def _scatter(self, cache, flat, enc, positions):
+        """Scatter encoded (B, S, ...) leaves + positions to flattened
+        pool indices ``flat`` ((B*S,); invalid -> nb*bs, mode='drop')."""
+        nb, bs = cache["pool_pos"].shape
+        n = flat.shape[0]
+        out = dict(cache)
+        for name, val in enc.items():
+            pool = cache[name]
+            out[name] = (
+                pool.reshape((nb * bs,) + pool.shape[2:])
+                .at[flat].set(
+                    val.astype(pool.dtype).reshape((n,) + pool.shape[2:]),
+                    mode="drop")
+                .reshape(pool.shape))
+        out["pool_pos"] = (cache["pool_pos"].reshape(nb * bs)
+                           .at[flat].set(positions.reshape(-1), mode="drop")
+                           .reshape(nb, bs))
+        return out
 
     def _flat(self, cache, positions, write_mask):
         """(B, S) flattened pool indices; invalid/masked writes -> index
@@ -488,12 +598,18 @@ class PagedKVCache(KVCache):
                 f"cache_len {cache_len} not a multiple of kv block size {bs}")
         bps = cache_len // bs
         nb = b * bps  # the contiguous layout's exact footprint
-        return {
-            "pool_k": jnp.zeros((nb, bs, cfg.n_kv_heads, cfg.d_head), dtype),
-            "pool_v": jnp.zeros((nb, bs, cfg.n_kv_heads, cfg.d_head), dtype),
+        (code, cdt), sc = kv_code_shapes(self.kv_bits, cfg.n_kv_heads,
+                                         cfg.d_head, dtype)
+        out = {
+            "pool_k": jnp.zeros((nb, bs) + code, cdt),
+            "pool_v": jnp.zeros((nb, bs) + code, cdt),
             "pool_pos": jnp.full((nb, bs), -1, jnp.int32),
             "table": jnp.full((b, bps), -1, jnp.int32),
         }
+        if sc is not None:
+            out["pool_ks"] = jnp.zeros((nb, bs) + sc[0], sc[1])
+            out["pool_vs"] = jnp.zeros((nb, bs) + sc[0], sc[1])
+        return out
 
     def insert(self, cache, sub, slots):
         """Write a (G, L, ...) CONTIGUOUS prefill sub-cache into the G
@@ -502,24 +618,10 @@ class PagedKVCache(KVCache):
         the allocator, which replaces the contiguous layout's full-slot
         overwrite invariant)."""
         pos = sub["slot_pos"]  # (G, L)
-        g, length = pos.shape
         table_rows = cache["table"][slots]  # (G, bps)
         flat = self._flat({**cache, "table": table_rows}, pos, None)
-        flat = flat.reshape(-1)
-        nb, bs = cache["pool_pos"].shape
-        kd = cache["pool_k"].dtype
-        return {
-            **cache,
-            "pool_k": cache["pool_k"].reshape(nb * bs, *cache["pool_k"].shape[2:])
-            .at[flat].set(sub["k"].astype(kd).reshape(g * length, *sub["k"].shape[2:]),
-                          mode="drop").reshape(cache["pool_k"].shape),
-            "pool_v": cache["pool_v"].reshape(nb * bs, *cache["pool_v"].shape[2:])
-            .at[flat].set(sub["v"].astype(kd).reshape(g * length, *sub["v"].shape[2:]),
-                          mode="drop").reshape(cache["pool_v"].shape),
-            "pool_pos": cache["pool_pos"].reshape(nb * bs)
-            .at[flat].set(pos.reshape(-1), mode="drop")
-            .reshape(cache["pool_pos"].shape),
-        }
+        return self._scatter(cache, flat.reshape(-1),
+                             self._encode(sub["k"], sub["v"]), pos)
 
     def reset(self, cache, slot):
         """Retire one slot: unmap its table row (-1) so ``gather`` masks
@@ -538,22 +640,8 @@ class PagedKVCache(KVCache):
         writable position range of two slots onto one block), so the
         scatter is deterministic; ``write_mask=False`` rows (retired or
         still-prefilling slots decoding junk) are dropped entirely."""
-        b, s = positions.shape
         flat = self._flat(cache, positions, write_mask).reshape(-1)
-        nb, bs = cache["pool_pos"].shape
-        kd = cache["pool_k"].dtype
-        return {
-            **cache,
-            "pool_k": cache["pool_k"].reshape(nb * bs, *cache["pool_k"].shape[2:])
-            .at[flat].set(k.astype(kd).reshape(b * s, *k.shape[2:]),
-                          mode="drop").reshape(cache["pool_k"].shape),
-            "pool_v": cache["pool_v"].reshape(nb * bs, *cache["pool_v"].shape[2:])
-            .at[flat].set(v.astype(kd).reshape(b * s, *v.shape[2:]),
-                          mode="drop").reshape(cache["pool_v"].shape),
-            "pool_pos": cache["pool_pos"].reshape(nb * bs)
-            .at[flat].set(positions.reshape(-1), mode="drop")
-            .reshape(cache["pool_pos"].shape),
-        }
+        return self._scatter(cache, flat, self._encode(k, v), positions)
 
     def truncate(self, cache, lengths):
         """Rollback through the table: every mapped pool row of slot ``b``
@@ -595,13 +683,31 @@ class PagedKVCache(KVCache):
         b, bps = table.shape
         bs = self.block_size
         safe = jnp.clip(table, 0)
-        k = cache["pool_k"][safe]  # (B, bps, bs, KVH, Dh)
+        k = cache["pool_k"][safe]  # (B, bps, bs, KVH, Dh-coded)
         v = cache["pool_v"][safe]
+        if self.kv_bits is not None:
+            dh_fp = k.shape[-1] * (8 if self.kv_bits == 1 else 1)
+            k = kv_dequantize(self.kv_bits, k, cache["pool_ks"][safe], dh_fp)
+            v = kv_dequantize(self.kv_bits, v, cache["pool_vs"][safe], dh_fp)
         pos = jnp.where(table[:, :, None] >= 0, cache["pool_pos"][safe], -1)
         kvh, dh = k.shape[-2:]
         return (k.reshape(b, bps * bs, kvh, dh),
                 v.reshape(b, bps * bs, kvh, dh),
                 pos.reshape(b, bps * bs))
+
+    def attend(self, cache, q, q_pos, cfg: AttnConfig, interpret=None):
+        b, c = q_pos.shape
+        cache_len = cache["table"].shape[1] * self.block_size
+        spb = attn_kernels.select_attn_tiles(b, c, cache_len, cfg.d_head,
+                                             "pgd")
+        return attn_kernels.flash_decode_paged(
+            cache["table"], q, q_pos, cache["pool_k"], cache["pool_v"],
+            cache["pool_pos"], cache.get("pool_ks"), cache.get("pool_vs"),
+            block_size=self.block_size, kv_bits=self.kv_bits,
+            sm_scale=cfg.scale, logit_softcap=cfg.logit_softcap,
+            causal=cfg.causal, window=cfg.window,
+            blocks_per_step=min(spb, cache["table"].shape[1]),
+            interpret=interpret)
 
 
 CONTIGUOUS = ContiguousKVCache()
@@ -641,9 +747,13 @@ def attn_decode(
         cache = kv.fill(cache, k_new, v_new, positions, write_mask)
 
     qg = q.reshape(b, 1, cfg.n_kv_heads, cfg.groups, cfg.d_head)
-    k, v, k_pos = kv.gather(cache)
-    mask = _mask(cfg, positions, k_pos)  # (B, 1, L)
-    out = _sdpa(cfg, qg, k, v, mask)
+    if cfg.fused_attn and not cross:
+        out = kv.attend(cache, qg, positions, cfg,
+                        interpret=ctx.gemm_config._interpret)
+    else:
+        k, v, k_pos = kv.gather(cache)
+        mask = _mask(cfg, positions, k_pos)  # (B, 1, L)
+        out = _sdpa(cfg, qg, k, v, mask)
     out = out.reshape(b, 1, cfg.n_heads * cfg.d_head).astype(ctx.compute_dtype)
     return ctx.dense(params["o"], out, f"{path}/o"), cache
 
@@ -672,8 +782,12 @@ def attn_window(
     q, k_new, v_new = _project_qkv(params, x, positions, cfg, ctx, path)
     cache = kv.fill_window(cache, k_new, v_new, positions, write_mask)
     qg = q.reshape(b, c, cfg.n_kv_heads, cfg.groups, cfg.d_head)
-    k, v, k_pos = kv.gather(cache)
-    mask = _mask(cfg, positions, k_pos)  # (B, C, L)
-    out = _sdpa(cfg, qg, k, v, mask)
+    if cfg.fused_attn:
+        out = kv.attend(cache, qg, positions, cfg,
+                        interpret=ctx.gemm_config._interpret)
+    else:
+        k, v, k_pos = kv.gather(cache)
+        mask = _mask(cfg, positions, k_pos)  # (B, C, L)
+        out = _sdpa(cfg, qg, k, v, mask)
     out = out.reshape(b, c, cfg.n_heads * cfg.d_head).astype(ctx.compute_dtype)
     return ctx.dense(params["o"], out, f"{path}/o"), cache

@@ -53,6 +53,22 @@ jitted steps only ever FOLLOW the table):
   "prefilled once, served to millions" pattern) skips their prefill
   entirely — ``SchedulerStats.shared_tokens`` counts the skipped tokens.
 
+**Quantized-pool invariants** (``EngineConfig.kv_bits``): the pool (or
+contiguous slab) stores int8 codes or 1-bit sign bytes instead of fp
+K/V, and the per-(head, group) scales live BESIDE the blocks — the scale
+pools (``pool_ks``/``pool_vs``, contiguous ``k_scale``/``v_scale``) are
+indexed by exactly the same flat block indices as the code pools and
+ride the same fill/insert scatters, so a block and its scales can never
+go out of sync (the allocator needs no extra bookkeeping; nothing above
+``nn/attention`` knows the tier exists).  Visibility is untouched:
+``truncate``/``reset`` only flip the position plane (``pool_pos`` /
+``slot_pos`` / table rows), so speculative rollback and slot recycling
+apply unchanged — a rolled-back block keeps stale codes exactly as the
+fp pool keeps stale keys, both hidden by ``pos = -1``.  The fused kernel
+dequantises per block tile in VMEM; the gather oracle dequantises the
+SAME codes, so greedy equivalence gating runs per tier.  The draft
+cache always stays fp (slot-private scratch).
+
 **Chunked prefill**: admission is per-request (no same-length grouping);
 each scheduler iteration advances every prefilling slot by one
 ``EngineConfig.prefill_chunk``-token window (``models/lm.decode_window``:
@@ -150,6 +166,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+import warnings
 from typing import Any
 
 import jax
@@ -266,6 +283,19 @@ class EngineConfig:
     # spec_len per request (checked at admission).
     draft: DraftModel | None = None
     spec_len: int = 2  # proposals per round (used when draft is set)
+    # route decode / window attention through the fused Pallas flash-
+    # decode kernel (kernels/attn_decode.py) instead of gather + _sdpa —
+    # reads the KV storage in place through the block tables (paged) or
+    # as a tiled slab (contiguous).  False keeps the gather oracle the
+    # fused path is CI-gated against.
+    fused_attn: bool = False
+    # KV-cache storage tier (lm family): None = fp compute dtype; 8 =
+    # int8 codes + per-(head, dh-group) absmax scales; 1 = sign bytes +
+    # per-head alpha (the XNOR tier).  Scale leaves live beside the
+    # code leaves in the cache pytree and ride the same one-hot/scatter
+    # writes; truncate/reset visibility applies unchanged (they only
+    # touch the position plane).  The draft cache stays fp.
+    kv_bits: int | None = None
 
 
 @dataclasses.dataclass
@@ -449,6 +479,21 @@ class Engine:
             # replace() re-runs QCtx.__post_init__, which threads ctx.mesh
             # into a shard-* gemm_config that carries none of its own
             ctx = dataclasses.replace(ctx, gemm_config=gc)
+        if ecfg.fused_attn or ecfg.kv_bits is not None:
+            if spec.family != "lm":
+                raise ValueError(
+                    "fused_attn / kv_bits: fused decode attention supports "
+                    "the lm family only (whisper's cross-attention cache "
+                    "stays on the gather path)")
+            if ecfg.kv_bits not in (None, 8, 1):
+                raise ValueError(
+                    f"kv_bits must be None, 8 or 1, got {ecfg.kv_bits}")
+            # thread the execution/storage tier into the model's attention
+            # config BEFORE the jit closures below capture cfg
+            cfg = dataclasses.replace(
+                cfg, attn=dataclasses.replace(
+                    cfg.attn, fused_attn=ecfg.fused_attn,
+                    kv_bits=ecfg.kv_bits))
         self.spec, self.cfg, self.ctx, self.ecfg = spec, cfg, ctx, ecfg
         self.params = params
         fam = spec.family
@@ -456,6 +501,8 @@ class Engine:
         self._mod = mod
 
         self.kv: attn_lib.KVCache = attn_lib.CONTIGUOUS
+        if ecfg.kv_bits is not None:
+            self.kv = attn_lib.ContiguousKVCache(kv_bits=ecfg.kv_bits)
         if ecfg.kv_block_size is not None:
             if fam != "lm":
                 raise ValueError(
@@ -475,7 +522,8 @@ class Engine:
                 raise ValueError(
                     f"cache_len {ecfg.cache_len} is not a multiple of "
                     f"kv_block_size {ecfg.kv_block_size}")
-            self.kv = attn_lib.PagedKVCache(block_size=ecfg.kv_block_size)
+            self.kv = attn_lib.PagedKVCache(block_size=ecfg.kv_block_size,
+                                            kv_bits=ecfg.kv_bits)
         kv = self.kv
 
         if fam == "whisper":
@@ -506,6 +554,12 @@ class Engine:
 
             self._window = jax.jit(_window)
             self._map_slot = jax.jit(_map_slot)
+        elif fam == "lm":
+            # thread the layout descriptor even when contiguous — a
+            # quantized tier is still a distinct layout (scale leaves)
+            def _decode(params, cache, tokens, pos):
+                return mod.decode_step(params, cfg, ctx, cache, tokens, pos,
+                                       kv=kv)
         else:
             def _decode(params, cache, tokens, pos):
                 return mod.decode_step(params, cfg, ctx, cache, tokens, pos)
@@ -652,6 +706,10 @@ class Engine:
         prefill, exactly the old fixed-batch path) and greedy outputs are
         unchanged.  With ``EngineConfig.eos_id`` set, rows that stop early
         are padded with the stop token out to ``max_new_tokens``."""
+        warnings.warn(
+            "Engine.generate is the deprecated fixed-batch surface; "
+            "submit Request objects to a Scheduler instead",
+            DeprecationWarning, stacklevel=2)
         prompts = np.asarray(prompts)
         b, _ = prompts.shape
         sched = Scheduler(self)

@@ -1,0 +1,245 @@
+"""Fused flash-decode attention (kernels/attn_decode.py) vs the gather +
+masked-sdpa oracle, over the storage the kernel actually reads: hypothesis
+sweeps of ragged lengths crossing block boundaries, both KV layouts,
+every kv_bits storage tier (the oracle dequantizes the SAME codes, so
+agreement is tight fp32 allclose even for the quantized tiers), the
+speculative truncate-then-decode round, write-masked retired rows, the
+(B, C) window query tile, and the quantization codec round-trip bounds.
+
+Fully-masked rows (no visible key) are the one intended divergence: the
+kernel emits exact zeros where the dense oracle's softmax-over-NEG_INF
+returns mean(v) — compared on active rows only, with the zero contract
+asserted separately."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import attn_decode as AK
+from repro.nn import attention as attn_lib
+
+_TOL = dict(rtol=0, atol=2e-5)
+
+
+def _cfg(dh=8, window=None, softcap=None):
+    return attn_lib.AttnConfig(d_model=4 * dh, n_heads=4, n_kv_heads=2,
+                               d_head=dh, window=window,
+                               logit_softcap=softcap, fused_attn=True)
+
+
+def _mk_kv(layout, kv_bits, bs):
+    if layout == "pgd":
+        return attn_lib.PagedKVCache(block_size=bs, kv_bits=kv_bits)
+    return attn_lib.ContiguousKVCache(kv_bits=kv_bits)
+
+
+def _fill(kv, cfg, lens, cache_len, rng, layout):
+    """Ragged per-row prefill through the real write path (fill_window,
+    per distinct length with write_mask — the paged pool is shared, so
+    rows are never written by slicing cache leaves)."""
+    b = len(lens)
+    cache = kv.init(b, cfg, cache_len, jnp.float32)
+    if layout == "pgd":
+        bps = cache["table"].shape[1]
+        cache["table"] = jnp.arange(b * bps, dtype=jnp.int32).reshape(b, bps)
+    kvh, dh = cfg.n_kv_heads, cfg.d_head
+    for ln in sorted({x for x in lens if x > 0}):
+        k = jnp.asarray(rng.standard_normal((b, ln, kvh, dh)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, ln, kvh, dh)), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(ln, dtype=jnp.int32), (b, ln))
+        wm = jnp.asarray([x == ln for x in lens])
+        if ln == 1:
+            cache = kv.fill(cache, k, v, pos, wm)
+        else:
+            cache = kv.fill_window(cache, k, v, pos, wm)
+    return cache
+
+
+def _oracle(cfg, kv, cache, q, q_pos):
+    k, v, spos = kv.gather(cache)
+    return attn_lib._sdpa(cfg, q, k, v, attn_lib._mask(cfg, q_pos, spos))
+
+
+def _compare(cfg, kv, cache, q, q_pos):
+    fused = kv.attend(cache, q, q_pos, cfg)
+    ref = _oracle(cfg, kv, cache, q, q_pos)
+    _, _, spos = kv.gather(cache)
+    vis = attn_lib._mask(cfg, q_pos, spos).any(-1)  # (B, C) any visible key
+    np.testing.assert_allclose(np.asarray(fused)[np.asarray(vis)],
+                               np.asarray(ref)[np.asarray(vis)], **_TOL)
+    # fully-masked rows: the kernel's documented zero contract
+    np.testing.assert_array_equal(
+        np.asarray(fused)[~np.asarray(vis)], 0.0)
+    return fused
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    layout=st.sampled_from(["ctg", "pgd"]),
+    kv_bits=st.sampled_from([None, 8, 1]),
+    bs=st.sampled_from([4, 8]), bps=st.integers(2, 4),
+    l1=st.integers(0, 31), l2=st.integers(0, 31), l3=st.integers(0, 31),
+)
+def test_fused_matches_oracle_ragged(layout, kv_bits, bs, bps, l1, l2, l3):
+    """Decode-step agreement over ragged lengths crossing block
+    boundaries, both layouts x every storage tier."""
+    cache_len = bs * bps
+    lens = [l % (cache_len) for l in (l1, l2, l3)]
+    cfg = _cfg()
+    kv = _mk_kv(layout, kv_bits, bs)
+    rng = np.random.default_rng(
+        [bs, bps, l1, l2, l3, layout == "pgd", kv_bits or 0])
+    cache = _fill(kv, cfg, lens, cache_len, rng, layout)
+    q = jnp.asarray(rng.standard_normal(
+        (3, 1, cfg.n_kv_heads, cfg.groups, cfg.d_head)), jnp.float32)
+    q_pos = jnp.asarray([[ln] for ln in lens], jnp.int32)
+    _compare(cfg, kv, cache, q, q_pos)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    layout=st.sampled_from(["ctg", "pgd"]),
+    kv_bits=st.sampled_from([None, 8, 1]),
+    keep1=st.integers(0, 15), keep2=st.integers(0, 15),
+)
+def test_fused_truncate_then_decode(layout, kv_bits, keep1, keep2):
+    """The speculative rollback round: fill, truncate to per-row keep
+    lengths (rejected proposals -> slot_pos = -1), decode-append one
+    token at the new frontier, then attend — the truncated tail must be
+    invisible to the fused kernel exactly as it is to the oracle."""
+    bs, cache_len = 4, 16
+    lens = [16, 11]
+    cfg = _cfg()
+    kv = _mk_kv(layout, kv_bits, bs)
+    rng = np.random.default_rng(
+        [keep1, keep2, layout == "pgd", kv_bits or 0])
+    cache = _fill(kv, cfg, lens, cache_len, rng, layout)
+    keep = jnp.asarray([min(keep1, lens[0]), min(keep2, lens[1])],
+                       jnp.int32)
+    cache = kv.truncate(cache, keep)
+    k1 = jnp.asarray(rng.standard_normal((2, 1, 2, cfg.d_head)), jnp.float32)
+    v1 = jnp.asarray(rng.standard_normal((2, 1, 2, cfg.d_head)), jnp.float32)
+    cache = kv.fill(cache, k1, v1, keep[:, None])
+    q = jnp.asarray(rng.standard_normal(
+        (2, 1, cfg.n_kv_heads, cfg.groups, cfg.d_head)), jnp.float32)
+    _compare(cfg, kv, cache, q, keep[:, None])
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    layout=st.sampled_from(["ctg", "pgd"]),
+    kv_bits=st.sampled_from([None, 8, 1]),
+    c=st.integers(2, 5),
+)
+def test_fused_window_query_tile(layout, kv_bits, c):
+    """The (B, C) query tile (chunked prefill / speculative verify):
+    per-row causal masking from absolute positions must match the oracle
+    at every window offset."""
+    bs, cache_len = 4, 24
+    lens = [20, 13]
+    cfg = _cfg()
+    kv = _mk_kv(layout, kv_bits, bs)
+    rng = np.random.default_rng(1000 + c)
+    cache = _fill(kv, cfg, lens, cache_len, rng, layout)
+    q = jnp.asarray(rng.standard_normal(
+        (2, c, cfg.n_kv_heads, cfg.groups, cfg.d_head)), jnp.float32)
+    # verify-window positions: rows start at their frontier minus c
+    starts = [max(0, ln - c) for ln in lens]
+    q_pos = jnp.asarray([[s + j for j in range(c)] for s in starts],
+                        jnp.int32)
+    _compare(cfg, kv, cache, q, q_pos)
+
+
+def test_fused_write_masked_retired_rows():
+    """A retired row's decode writes are dropped (write_mask=False) while
+    live rows keep appending; the fused kernel over the resulting pool
+    must match the oracle for the live rows AND the retired row's stale
+    prefix — junk from the shape-static step never lands, so it cannot
+    poison anyone's online softmax."""
+    bs, cache_len = 4, 16
+    lens = [10, 8]
+    cfg = _cfg()
+    rng = np.random.default_rng(7)
+    for layout in ("ctg", "pgd"):
+        for kv_bits in (None, 8, 1):
+            kv = _mk_kv(layout, kv_bits, bs)
+            cache = _fill(kv, cfg, lens, cache_len, rng, layout)
+            cur = np.asarray(lens, np.int32)
+            wm = jnp.asarray([True, False])  # row 1 retired
+            for _ in range(3):
+                k1 = jnp.asarray(rng.standard_normal((2, 1, 2, cfg.d_head)),
+                                 jnp.float32)
+                v1 = jnp.asarray(rng.standard_normal((2, 1, 2, cfg.d_head)),
+                                 jnp.float32)
+                cache = kv.fill(cache, k1, v1,
+                                jnp.asarray(cur)[:, None], wm)
+                cur = cur + 1
+            q = jnp.asarray(rng.standard_normal(
+                (2, 1, cfg.n_kv_heads, cfg.groups, cfg.d_head)), jnp.float32)
+            # live row queries its frontier; retired row its stale one
+            q_pos = jnp.asarray([[int(cur[0])], [lens[1]]], jnp.int32)
+            _compare(cfg, kv, cache, q, q_pos)
+
+
+def test_fused_junk_blocks_invisible_paged():
+    """Unmapped table entries (-1) skip at the grid level: poisoning the
+    orphaned pool blocks with huge values must not change the fused
+    output at all."""
+    bs, cache_len = 4, 16
+    cfg = _cfg()
+    kv = _mk_kv("pgd", None, bs)
+    rng = np.random.default_rng(11)
+    cache = _fill(kv, cfg, [9, 5], cache_len, rng, "pgd")
+    # orphan row 1's last two blocks
+    cache["table"] = cache["table"].at[1, 2:].set(-1)
+    q = jnp.asarray(rng.standard_normal(
+        (2, 1, cfg.n_kv_heads, cfg.groups, cfg.d_head)), jnp.float32)
+    q_pos = jnp.asarray([[9], [5]], jnp.int32)
+    out = _compare(cfg, kv, cache, q, q_pos)
+    # blocks 6 and 7 are row 1's orphaned range (the identity table maps
+    # row 1 -> blocks 4..7; entries 2 and 3 were just unmapped)
+    poisoned = dict(cache)
+    for name in ("pool_k", "pool_v"):
+        poisoned[name] = poisoned[name].at[6:].set(1e30)
+    out2 = kv.attend(poisoned, q, q_pos, cfg)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_fused_softcap_and_window():
+    """Logit softcap + sliding-window masking run in-kernel with the same
+    semantics as the jnp path."""
+    bs, cache_len = 4, 16
+    lens = [14, 9]
+    cfg = _cfg(window=6, softcap=8.0)
+    rng = np.random.default_rng(13)
+    for layout in ("ctg", "pgd"):
+        kv = _mk_kv(layout, None, bs)
+        cache = _fill(kv, cfg, lens, cache_len, rng, layout)
+        q = jnp.asarray(rng.standard_normal(
+            (2, 1, cfg.n_kv_heads, cfg.groups, cfg.d_head)), jnp.float32)
+        q_pos = jnp.asarray([[ln] for ln in lens], jnp.int32)
+        _compare(cfg, kv, cache, q, q_pos)
+
+
+@settings(max_examples=15, deadline=None)
+@given(bits=st.sampled_from([8, 1]), dh=st.sampled_from([8, 16, 32, 64]))
+def test_kv_codec_round_trip_bounds(bits, dh):
+    """Codec contract: int8 per-(head, dh-group) absmax keeps max error
+    <= scale/2 per group; 1-bit reproduces alpha * sign exactly."""
+    rng = np.random.default_rng(bits * 100 + dh)
+    x = jnp.asarray(rng.standard_normal((3, 5, 2, dh)), jnp.float32)
+    codes, scale = AK.kv_quantize(bits, x)
+    back = AK.kv_dequantize(bits, codes, scale, dh)
+    if bits == 8:
+        g = AK.kv_scale_groups(dh)
+        half_step = np.asarray(scale)[..., None] / 2 + 1e-7
+        err = np.abs(np.asarray(back) - np.asarray(x)).reshape(
+            3, 5, 2, g, dh // g)
+        assert (err <= half_step).all()
+    else:
+        alpha = np.abs(np.asarray(x)).mean(-1, keepdims=True)
+        signs = np.where(np.asarray(x) >= 0, 1.0, -1.0)
+        np.testing.assert_allclose(np.asarray(back), alpha * signs,
+                                   rtol=0, atol=1e-6)

@@ -28,7 +28,10 @@ def test_engine_generates():
                  EngineConfig(batch=3, cache_len=64, max_new_tokens=8))
     prompts = np.random.default_rng(0).integers(
         0, cfg.vocab_size, (3, 10)).astype(np.int32)
-    out = eng.generate(prompts)
+    # the fixed-batch surface is deprecated in favour of Scheduler
+    # requests; it must say so (stacklevel=2: the warning points here)
+    with pytest.warns(DeprecationWarning, match="Scheduler"):
+        out = eng.generate(prompts)
     assert out.shape == (3, 8)
     assert (out >= 0).all() and (out < cfg.vocab_size).all()
 
